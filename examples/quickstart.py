@@ -1,0 +1,46 @@
+"""Quickstart: fit a Latent Kronecker GP to partial learning curves and
+predict their continuations.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.core import LKGP, LKGPConfig
+from repro.data import sample_task
+
+
+def main():
+    # 16 hyper-parameter configs, 20 epochs, curves observed partially
+    task = sample_task(seed=7, n=16, m=20, d=7)
+    print(f"task: X {task.X.shape}, curves {task.Y.shape}, "
+          f"{int(task.mask.sum())}/{task.mask.size} values observed")
+
+    model = LKGP(LKGPConfig(lbfgs_iters=50))
+    model.fit(task.X, task.t, task.Y, task.mask)
+    res = model.fit_result
+    print(f"fit: {res.n_iters} L-BFGS iters, {res.n_evals} evals, "
+          f"objective {res.fun:.4f} (method: {model.mll_method_used})")
+    print(f"learned noise sigma^2 = "
+          f"{float(np.exp(model.params.raw_noise)):.2e}")
+
+    mean, var = model.predict_final()
+    truth = task.Y_full[:, -1]
+    err = np.abs(np.asarray(mean) - truth)
+    z = err / np.sqrt(np.asarray(var))
+    print("\nconfig | observed | predicted final | true final | |z|")
+    for i in range(len(truth)):
+        n_obs = int(task.mask[i].sum())
+        print(f"  {i:3d}  | {n_obs:2d}/20 ep | {float(mean[i]):.4f}        "
+              f"| {truth[i]:.4f}    | {z[i]:.2f}")
+    rmse = float(np.sqrt(np.mean(err ** 2)))
+    cover = float(np.mean(z < 2.0))
+    print(f"\nRMSE(final) = {rmse:.4f};  |z|<2 coverage = {cover:.0%}")
+    assert rmse < 0.1, "quickstart regression: rmse too high"
+
+
+if __name__ == "__main__":
+    main()

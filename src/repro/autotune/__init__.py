@@ -1,0 +1,2 @@
+"""LKGP-driven early-stopping (freeze-thaw) scheduler."""
+from .scheduler import AutotuneConfig, FreezeThawScheduler

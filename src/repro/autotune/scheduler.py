@@ -1,0 +1,114 @@
+"""LKGP-driven early-stopping scheduler (the paper's AutoML application).
+
+Freeze-thaw-style loop over a pool of training runs:
+  1. every ``refit_every`` epochs, fit an LKGP to all partial curves;
+  2. predict each run's final-epoch metric (Matheron posterior over the
+     full grid);
+  3. stop runs whose predicted final value is below the best observed /
+     predicted value with high confidence (UCB rule), reallocating their
+     remaining budget to survivors.
+
+This is the system-level answer to stragglers and wasted fleet compute: bad
+hyper-parameter configurations are detected from partial learning curves and
+preempted. Works with any trainer exposing (advance one epoch -> metric).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import numpy as np
+
+from ..core import LKGP, LKGPConfig
+
+__all__ = ["AutotuneConfig", "FreezeThawScheduler"]
+
+
+@dataclass
+class AutotuneConfig:
+    max_epochs: int = 20
+    refit_every: int = 2
+    min_epochs_before_stop: int = 3
+    ucb_beta: float = 1.0          # stop if pred + beta*std < best estimate
+    maximize: bool = True
+    gp: LKGPConfig = field(default_factory=lambda: LKGPConfig(lbfgs_iters=30))
+
+
+class FreezeThawScheduler:
+    """Drives n runs; ``step_fns[i]() -> float`` advances run i one epoch."""
+
+    def __init__(self, X: np.ndarray, step_fns: list[Callable[[], float]],
+                 cfg: AutotuneConfig | None = None, seed: int = 0):
+        self.X = np.asarray(X, np.float64)
+        self.step_fns = step_fns
+        self.cfg = cfg or AutotuneConfig()
+        n, m = len(step_fns), self.cfg.max_epochs
+        self.Y = np.zeros((n, m))
+        self.mask = np.zeros((n, m))
+        self.active = np.ones(n, bool)
+        self.seed = seed
+        self.history: list[dict] = []
+        self.model: LKGP | None = None
+
+    # -- core loop -----------------------------------------------------------
+    def run(self, total_epoch_budget: int | None = None) -> dict:
+        cfg = self.cfg
+        n, m = self.Y.shape
+        budget = total_epoch_budget if total_epoch_budget is not None else n * m
+        epoch = 0
+        spent = 0
+        while spent < budget and self.active.any() and epoch < m:
+            for i in range(n):
+                if not self.active[i] or spent >= budget:
+                    continue
+                val = float(self.step_fns[i]())
+                self.Y[i, epoch] = val
+                self.mask[i, epoch] = 1.0
+                spent += 1
+            if (epoch + 1) % cfg.refit_every == 0 \
+                    and epoch + 1 >= cfg.min_epochs_before_stop \
+                    and epoch + 1 < m:
+                self._refit_and_stop(epoch + 1)
+            epoch += 1
+        return self.summary(spent)
+
+    def _refit_and_stop(self, epochs_done: int):
+        cfg = self.cfg
+        t = np.arange(1.0, self.Y.shape[1] + 1.0)
+        sign = 1.0 if cfg.maximize else -1.0
+        model = LKGP(cfg.gp)
+        model.fit(self.X, t, sign * self.Y, self.mask)
+        self.model = model
+        mean, var = model.predict_final(
+            key=jax.random.PRNGKey(self.seed + epochs_done))
+        mean = np.asarray(mean)
+        std = np.sqrt(np.maximum(np.asarray(var), 0.0))
+        best = float(np.max(mean[self.active]))
+        stopped = []
+        for i in range(len(mean)):
+            if self.active[i] and mean[i] + cfg.ucb_beta * std[i] < best:
+                self.active[i] = False
+                stopped.append(i)
+        self.history.append({
+            "epoch": epochs_done, "stopped": stopped,
+            "active": int(self.active.sum()),
+            "pred_best": best,
+        })
+
+    def summary(self, spent: int) -> dict:
+        t = np.arange(1.0, self.Y.shape[1] + 1.0)
+        obs_best = float(np.max(self.Y[self.mask > 0])) if self.mask.any() else None
+        # final prediction pass for reporting
+        pred_mean = None
+        if self.model is not None:
+            mean, _ = self.model.predict_final(
+                key=jax.random.PRNGKey(self.seed + 999))
+            pred_mean = np.asarray(mean).tolist()
+        return {
+            "epochs_spent": spent,
+            "observed_best": obs_best,
+            "survivors": np.where(self.active)[0].tolist(),
+            "stop_events": self.history,
+            "predicted_final": pred_mean,
+        }

@@ -1,0 +1,2 @@
+"""Fault-tolerant checkpoint manager."""
+from .manager import CheckpointManager

@@ -1,0 +1,6 @@
+"""Published architecture configs + reduced smoke variants."""
+from .base import (ARCH_IDS, SHAPES, ModelConfig, ShapeSpec, get_config,
+                   get_smoke_config, shape_applicable)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ModelConfig", "ShapeSpec", "get_config",
+           "get_smoke_config", "shape_applicable"]

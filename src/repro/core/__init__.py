@@ -1,0 +1,23 @@
+"""Core library: the paper's contribution (Latent Kronecker GP)."""
+from .cg import CGResult, cg_solve
+from .gp_kernels import KERNELS_1D, matern12, matern32, matern52, rbf_ard
+from .lbfgs import LBFGSResult, lbfgs_minimize
+from .lkgp import (LKGP, LKGPConfig, LKGPParams, gram_matrices, init_params,
+                   log_prior, make_mll_iterative, mll_cholesky)
+from .matheron import sample_posterior_grid
+from .mvm import (grid_to_packed, joint_cov_packed, kron_dense, lk_mvm,
+                  lk_operator, packed_to_grid)
+from .priors import noise_prior_logpdf, x_lengthscale_prior_logpdf
+from .slq import lanczos, rademacher_probes, slq_logdet
+from .transforms import TTransform, XTransform, YTransform
+
+__all__ = [
+    "CGResult", "cg_solve", "KERNELS_1D", "matern12", "matern32", "matern52",
+    "rbf_ard", "LBFGSResult", "lbfgs_minimize", "LKGP", "LKGPConfig",
+    "LKGPParams", "gram_matrices", "init_params", "log_prior",
+    "make_mll_iterative", "mll_cholesky", "sample_posterior_grid",
+    "grid_to_packed", "joint_cov_packed", "kron_dense", "lk_mvm",
+    "lk_operator", "packed_to_grid", "noise_prior_logpdf",
+    "x_lengthscale_prior_logpdf", "lanczos", "rademacher_probes",
+    "slq_logdet", "TTransform", "XTransform", "YTransform",
+]

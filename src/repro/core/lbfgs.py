@@ -1,0 +1,145 @@
+"""L-BFGS with two-loop recursion and strong-Wolfe line search.
+
+The paper fits the 10 GP hyper-parameters with (PyTorch) L-BFGS; neither
+optax nor scipy-in-jit is available offline, so this is a small, dependency
+free implementation. The driver is a Python loop (the objective is cheap and
+called O(100) times); the objective itself should be jitted by the caller.
+
+Operates on flat vectors; use ``jax.flatten_util.ravel_pytree`` to adapt.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["lbfgs_minimize", "LBFGSResult"]
+
+
+class LBFGSResult(NamedTuple):
+    x: np.ndarray
+    fun: float
+    n_iters: int
+    n_evals: int
+    converged: bool
+
+
+def _two_loop(g, s_list, y_list):
+    """H * g via the standard two-loop recursion."""
+    q = g.copy()
+    alphas = []
+    rhos = [1.0 / max(float(np.dot(y, s)), 1e-300) for s, y in zip(s_list, y_list)]
+    for s, y, rho in zip(reversed(s_list), reversed(y_list), reversed(rhos)):
+        a = rho * float(np.dot(s, q))
+        alphas.append(a)
+        q -= a * y
+    if s_list:
+        s, y = s_list[-1], y_list[-1]
+        gamma = float(np.dot(s, y)) / max(float(np.dot(y, y)), 1e-300)
+        q *= gamma
+    for (s, y, rho), a in zip(zip(s_list, y_list, rhos), reversed(alphas)):
+        b = rho * float(np.dot(y, q))
+        q += (a - b) * s
+    return q
+
+
+def _wolfe_line_search(fg, x, f0, g0, d, c1=1e-4, c2=0.9, max_evals=25):
+    """Strong-Wolfe line search (bracket + zoom, Nocedal & Wright alg. 3.5/3.6)."""
+    dg0 = float(np.dot(g0, d))
+    if dg0 >= 0:  # not a descent direction; caller resets
+        return None, 0
+
+    def phi(a):
+        f, g = fg(x + a * d)
+        return float(f), g, float(np.dot(g, d))
+
+    evals = 0
+    a_prev, f_prev, dg_prev = 0.0, f0, dg0
+    a = 1.0
+    a_max = 1e10
+    for _ in range(max_evals):
+        f, g, dg = phi(a)
+        evals += 1
+        if not np.isfinite(f):
+            a_max = a
+            a = 0.5 * (a_prev + a)
+            continue
+        if f > f0 + c1 * a * dg0 or (evals > 1 and f >= f_prev):
+            lo, f_lo, dg_lo, hi = a_prev, f_prev, dg_prev, a
+            break
+        if abs(dg) <= -c2 * dg0:
+            return (a, f, g), evals
+        if dg >= 0:
+            lo, f_lo, dg_lo, hi = a, f, dg, a_prev
+            break
+        a_prev, f_prev, dg_prev = a, f, dg
+        a = min(2.0 * a, a_max)
+    else:
+        return (a, f, g), evals  # best effort
+
+    # zoom
+    for _ in range(max_evals):
+        a = 0.5 * (lo + hi)
+        f, g, dg = phi(a)
+        evals += 1
+        if not np.isfinite(f) or f > f0 + c1 * a * dg0 or f >= f_lo:
+            hi = a
+        else:
+            if abs(dg) <= -c2 * dg0:
+                return (a, f, g), evals
+            if dg * (hi - lo) >= 0:
+                hi = lo
+            lo, f_lo, dg_lo = a, f, dg
+        if abs(hi - lo) < 1e-14:
+            break
+    return (a, f, g), evals
+
+
+def lbfgs_minimize(value_and_grad: Callable, x0, max_iters: int = 100,
+                   history: int = 10, gtol: float = 1e-6,
+                   ftol: float = 1e-10) -> LBFGSResult:
+    """Minimise a smooth objective. ``value_and_grad(x) -> (f, g)``."""
+
+    def fg(x):
+        f, g = value_and_grad(jnp.asarray(x))
+        return float(f), np.asarray(g, dtype=np.float64)
+
+    x = np.asarray(x0, dtype=np.float64).copy()
+    f, g = fg(x)
+    n_evals = 1
+    s_list: list[np.ndarray] = []
+    y_list: list[np.ndarray] = []
+    converged = False
+    it = 0
+    for it in range(1, max_iters + 1):
+        if np.max(np.abs(g)) < gtol:
+            converged = True
+            break
+        d = -_two_loop(g, s_list, y_list)
+        res, ev = _wolfe_line_search(fg, x, f, g, d)
+        n_evals += ev
+        if res is None:  # bad direction: reset memory, steepest descent
+            s_list.clear()
+            y_list.clear()
+            d = -g
+            res, ev = _wolfe_line_search(fg, x, f, g, d)
+            n_evals += ev
+            if res is None:
+                break
+        a, f_new, g_new = res
+        x_new = x + a * d
+        s = x_new - x
+        y = g_new - g
+        if float(np.dot(s, y)) > 1e-10 * float(np.linalg.norm(s)) * float(np.linalg.norm(y)):
+            s_list.append(s)
+            y_list.append(y)
+            if len(s_list) > history:
+                s_list.pop(0)
+                y_list.pop(0)
+        if abs(f - f_new) < ftol * max(1.0, abs(f)):
+            x, f, g = x_new, f_new, g_new
+            converged = True
+            break
+        x, f, g = x_new, f_new, g_new
+    return LBFGSResult(x=x, fun=f, n_iters=it, n_evals=n_evals, converged=converged)

@@ -1,0 +1,83 @@
+"""Partial pivoted-Cholesky preconditioner for the latent-Kronecker CG.
+
+Beyond-paper extension (the paper's App. B notes CG convergence depends on
+conditioning; Lin et al. 2024b — cited therein — study solver improvements).
+We build a rank-r pivoted Cholesky approximation L_r of the *latent* joint
+covariance using the separable structure: entries of K1 (x) K2 are computed
+lazily as K1[i1,j1]*K2[i2,j2] on observed cells only, so the factorisation
+costs O(N r^2) time and O(N r) memory for N observed values, never
+materialising the joint matrix. The preconditioner is the standard
+woodbury-inverted (L_r L_r^T + sigma^2 I)^{-1} applied in O(N r) per CG
+iteration — provably reducing the condition number to that of the residual
+spectrum (Gardner et al. 2018).
+
+Operates on packed (observed-only) vectors; `lkgp` wires it into CG via the
+grid<->packed helpers when ``LKGPConfig.precond_rank > 0``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+__all__ = ["pivoted_cholesky_latent", "woodbury_preconditioner"]
+
+
+def pivoted_cholesky_latent(K1, K2, mask, rank: int, jitter: float = 1e-12):
+    """Rank-``rank`` pivoted Cholesky of (P (K1xK2) P^T) via lazy entries.
+
+    Returns L (N, rank) over the packed observed entries (numpy, float64 —
+    this is a host-side setup cost, not a jitted inner loop).
+    """
+    K1 = np.asarray(K1, np.float64)
+    K2 = np.asarray(K2, np.float64)
+    mask_np = np.asarray(mask)
+    rows, cols = np.nonzero(mask_np)
+    N = len(rows)
+    rank = min(rank, N)
+
+    diag = K1[rows, rows] * K2[cols, cols]
+    L = np.zeros((N, rank))
+    perm = np.arange(N)
+    d = diag.copy()
+
+    for k in range(rank):
+        # pivot: largest remaining diagonal
+        j = k + int(np.argmax(d[perm[k:]]))
+        perm[[k, j]] = perm[[j, k]]
+        p = perm[k]
+        pivot = d[p]
+        if pivot <= jitter:
+            L = L[:, :k]
+            break
+        lkk = np.sqrt(pivot)
+        L[p, k] = lkk
+        rest = perm[k + 1:]
+        # lazy row of the joint covariance at the pivot
+        row = K1[rows[rest], rows[p]] * K2[cols[rest], cols[p]]
+        if k > 0:
+            row = row - L[rest, :k] @ L[p, :k]
+        L[rest, k] = row / lkk
+        d[rest] = d[rest] - L[rest, k] ** 2
+    return jnp.asarray(L)
+
+
+def woodbury_preconditioner(L, noise):
+    """M^{-1} v for M = L L^T + noise I, via Woodbury in O(N r).
+
+    Returns a function on packed vectors (..., N):
+    M^{-1} = I/s - L (s I_r + L^T L)^{-1} L^T / s^2,  s = noise.
+    """
+    import jax
+
+    N, r = L.shape
+    eye = jnp.eye(r, dtype=L.dtype)
+    inner = noise * eye + L.T @ L            # (r, r), SPD
+    chol = jnp.linalg.cholesky(inner)
+
+    def apply(v):
+        w = jnp.einsum("nr,...n->...r", L, v)
+        z = jax.scipy.linalg.cho_solve((chol, True), w[..., None])[..., 0]
+        return v / noise - jnp.einsum("nr,...r->...n", L, z) / noise
+
+    return apply

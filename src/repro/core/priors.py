@@ -1,0 +1,34 @@
+"""Hyper-parameter priors (paper App. B).
+
+Parameters are optimised in log space (raw = log value). A LogNormal(mu, s)
+prior on the positive parameter is a Normal(mu, s) density on its log, which
+is what we evaluate on the raw parameter (MAP in the log parameterisation,
+matching the paper's "marginal likelihood plus priors" objective).
+
+* x lengthscales: LogNormal(sqrt(2) + 0.5 log d, sqrt(3))   [Hvarfner et al.]
+* noise variance: LogNormal(-4, 1)
+* t lengthscale / outputscale: no prior.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+__all__ = ["normal_logpdf", "x_lengthscale_prior_logpdf", "noise_prior_logpdf"]
+
+_LOG_2PI = math.log(2.0 * math.pi)
+
+
+def normal_logpdf(x: jnp.ndarray, mu: float, sigma: float) -> jnp.ndarray:
+    z = (x - mu) / sigma
+    return -0.5 * (z * z + _LOG_2PI) - math.log(sigma)
+
+
+def x_lengthscale_prior_logpdf(raw_lengthscale: jnp.ndarray, d: int) -> jnp.ndarray:
+    mu = math.sqrt(2.0) + 0.5 * math.log(d)
+    return jnp.sum(normal_logpdf(raw_lengthscale, mu, math.sqrt(3.0)))
+
+
+def noise_prior_logpdf(raw_noise: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(normal_logpdf(raw_noise, -4.0, 1.0))

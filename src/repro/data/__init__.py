@@ -1,0 +1,3 @@
+"""Learning-curve prior and token pipeline."""
+from .curves import CurveTask, benchmark_cutoffs, sample_task
+from .tokens import TokenPipeline

@@ -1,0 +1,93 @@
+"""Synthetic learning-curve generator (LCBench-like prior).
+
+The LCBench/ifBO artifacts are not available offline, so the prediction
+benchmark samples tasks from the same parametric families the DPL / ifBO
+priors use (pow3, log-power, exponential-saturation, Janoschek), with
+hyper-parameter-driven coefficients, heteroskedastic noise, occasional spikes
+and divergent curves — matching the qualitative regimes of Fig. 1.
+
+A "task" = n configs x of dim d, curves over m epochs, plus an
+early-stopping mask (each curve observed up to a random cutoff).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+__all__ = ["CurveTask", "sample_task", "benchmark_cutoffs"]
+
+
+class CurveTask(NamedTuple):
+    X: np.ndarray       # (n, d) hyper-parameters in [0, 1]
+    t: np.ndarray       # (m,) epochs 1..m
+    Y: np.ndarray       # (n, m) validation-accuracy-like curves
+    mask: np.ndarray    # (n, m) 1.0 where observed
+    Y_full: np.ndarray  # ground truth (n, m)
+
+
+def _curve_family(rng, x, t_norm):
+    """One curve as a function of its hyper-parameters x (d >= 4 used)."""
+    kind = rng.integers(0, 4)
+    # config-dependent asymptote / rate / delay
+    asym = 0.55 + 0.4 * (0.6 * x[0] + 0.4 * x[1]) - 0.1 * (x[2] - 0.5) ** 2
+    rate = 0.5 + 6.0 * x[2] + 2.0 * x[0]
+    delay = 0.05 + 0.3 * x[3]
+    lo = 0.08 + 0.15 * x[1]
+    tt = np.maximum(t_norm - 0.02 * delay, 1e-4)
+    if kind == 0:      # pow3: asym - a * t^-alpha
+        a = (asym - lo)
+        y = asym - a * np.power(tt * 50 + 1, -0.3 - 1.5 * x[2])
+    elif kind == 1:    # log-power
+        y = asym / (1 + np.power(tt * 30 / np.exp(delay), -(0.8 + rate / 4)))
+        y = lo + (asym - lo) * (y / max(asym, 1e-3))
+    elif kind == 2:    # exponential saturation
+        y = asym - (asym - lo) * np.exp(-rate * tt * 3)
+    else:              # Janoschek
+        y = asym - (asym - lo) * np.exp(-rate * np.power(tt, 1.2) * 2.5)
+    return np.clip(y, 0.0, 1.0)
+
+
+def sample_task(seed: int, n: int = 32, m: int = 20, d: int = 7,
+                observed_fraction: tuple[float, float] = (0.1, 0.9),
+                noise: float = 0.01, spike_prob: float = 0.05,
+                diverge_prob: float = 0.03) -> CurveTask:
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(0, 1, (n, d))
+    t = np.arange(1.0, m + 1.0)
+    t_norm = (t - 1) / (m - 1) if m > 1 else t * 0 + 1.0
+    Y = np.stack([_curve_family(rng, X[i], t_norm) for i in range(n)])
+
+    # noise, spikes, divergence (Fig 1 right panel regimes)
+    Y = Y + rng.normal(0, noise * (0.5 + X[:, :1]), Y.shape)
+    spikes = rng.random(Y.shape) < spike_prob
+    Y = np.where(spikes, Y - rng.uniform(0.05, 0.3, Y.shape), Y)
+    diverges = rng.random(n) < diverge_prob
+    for i in np.where(diverges)[0]:
+        start = rng.integers(m // 2, m)
+        Y[i, start:] -= np.linspace(0, 0.3, m - start)
+    Y = np.clip(Y, 0.0, 1.0)
+
+    Y_full = Y.copy()
+    lens = rng.integers(max(1, int(observed_fraction[0] * m)),
+                        max(2, int(observed_fraction[1] * m)) + 1, n)
+    lens[rng.integers(0, n)] = m  # keep one fully observed curve
+    mask = (np.arange(m)[None, :] < lens[:, None]).astype(np.float64)
+    return CurveTask(X=X, t=t, Y=Y * mask, mask=mask, Y_full=Y_full)
+
+
+def benchmark_cutoffs(n_train_examples: int, n: int, m: int,
+                      seed: int) -> np.ndarray:
+    """ifBO-style protocol: a budget of observed values spread over configs."""
+    rng = np.random.default_rng(seed)
+    lens = np.zeros(n, np.int64)
+    order = rng.permutation(n)
+    budget = n_train_examples
+    i = 0
+    while budget > 0:
+        c = order[i % n]
+        if lens[c] < m:
+            lens[c] += 1
+            budget -= 1
+        i += 1
+    return lens

@@ -1,0 +1,4 @@
+"""Mesh sharding rules, collectives, distributed LKGP."""
+from .sharding import (ACT_RULES, FSDP_RULES, TP_RULES, batch_shardings,
+                       dp_axes, logical_to_pspec, make_constrain,
+                       param_shardings, rules_for)

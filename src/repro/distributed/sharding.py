@@ -1,0 +1,206 @@
+"""Logical-axis sharding rules (MaxText-style) for the production meshes.
+
+Parameters and activations carry *logical* axis names (see the per-model
+param tables); rules map logical names to mesh axes. The resolver drops any
+mesh axis that does not evenly divide the dimension (NamedSharding requires
+even tiling) and never uses a mesh axis twice within one spec — so e.g.
+phi3's 40 heads fall back to fused-dim sharding and batch=1 decode shapes
+fall back to replication, by construction rather than by special case.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["TP_RULES", "FSDP_RULES", "ZERO_RULES", "SERVE_RULES", "ACT_RULES",
+           "rules_for", "logical_to_pspec", "make_constrain",
+           "param_shardings", "batch_shardings", "dp_axes",
+           "set_active_mesh", "get_active_mesh"]
+
+# Mesh context for shard_map-based layers (the MoE expert-parallel path).
+# Set by the trainer / serve / dry-run builders; None in single-device tests,
+# which then use the pure-einsum reference implementation.
+_ACTIVE_MESH: list = [None]
+
+
+def set_active_mesh(mesh):
+    _ACTIVE_MESH[0] = mesh
+
+
+def get_active_mesh():
+    return _ACTIVE_MESH[0]
+
+# -- parameter rules --------------------------------------------------------
+TP_RULES: dict[str, Any] = {
+    "vocab": "model",
+    "heads_fused": "model",
+    "kv_fused": "model",
+    "heads": "model",
+    "mlp": "model",
+    "experts": "model",
+    "rnn": "model",
+    "embed": None,
+    "embed_out": None,
+    "rnn_in": None,
+    "moe_groups": "data",
+    "layers": None,
+    "batch": None,          # parameters have no batch axis
+}
+
+# FSDP additionally shards the d_model ("embed") dim of weights over 'data'
+# (ZeRO-3 style: optimizer state and parameters fully sharded; XLA inserts
+# all-gathers at use sites). Used for the >=10B archs.
+FSDP_RULES = dict(TP_RULES, embed="data", rnn_in="data", embed_out="data")
+
+# Pure ZeRO-DP (§Perf hillclimb 3): no tensor parallelism — both mesh axes
+# are data-parallel for activations; weights/optimizer state shard 256-way on
+# their widest dim and are all-gathered per layer. Wins when per-layer
+# weight bytes < per-layer activation all-reduce bytes (dense <=72B here).
+ZERO_RULES = dict(
+    TP_RULES,
+    heads_fused=None, kv_fused=None, heads=None, mlp=None,
+    experts=None, rnn=None,
+    # every weight shards 256-way on its d_model ("embed") dim; the vocab dim
+    # of the embedding table takes whatever axis remains so the table is also
+    # fully sharded (iter-3: avoids replicating multi-GiB tables at lookup).
+    vocab=("data", "model"),
+    embed=("data", "model"), rnn_in=("data", "model"),
+    embed_out=("data", "model"),
+)
+ZERO_ACT_RULES = {
+    "batch": ("pod", "data", "model"),
+    "seq": None,
+    "heads": None, "vocab": None, "mlp": None, "embed": None,
+    "experts": None, "moe_groups": None, "rnn": None,
+}
+
+# Serving (§Perf hillclimb 2): weights stay RESIDENT (no FSDP gathers per
+# token) — TP over 'model', and the MoE/MLP inner dim additionally over
+# 'data' so the 480B-class experts fit (psums of decode activations are
+# tiny). Optimizer state does not exist at serve time.
+SERVE_RULES = dict(TP_RULES, mlp=("model", "data"))
+
+# Decode-specific layout (§Perf hillclimb 2, iter 4): 2D tensor parallelism
+# over BOTH axes — weights shard 256-way on (d_model x d_ff) so a 72B dense
+# model costs ~0.6 GiB/chip resident, and every per-token collective is a
+# psum of (B, 1, .) activations (KBs). Wrong for prefill (token-heavy), right
+# for decode (weight-heavy).
+SERVE_DECODE_RULES = dict(
+    TP_RULES,
+    embed="model", mlp="data", heads_fused=None, kv_fused=None, heads=None,
+    vocab="data", experts="model", rnn="data", rnn_in="model",
+    embed_out="data",
+)
+
+# -- activation rules -------------------------------------------------------
+ACT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "heads": "model",
+    "vocab": "model",
+    "mlp": "model",
+    "embed": None,
+    "experts": "model",
+    "moe_groups": "data",
+    "rnn": "model",
+}
+
+# Sequence parallelism for the MoE trains (§Perf hillclimb 1, iteration 2):
+# layer-boundary activations (the remat'd scan carries) shard their sequence
+# dim over 'model', cutting saved-activation HBM 16x for one AG/RS pair per
+# layer. Used with the expert-parallel shard_map MoE.
+SP_ACT_RULES = dict(ACT_RULES, seq="model")
+
+
+def rules_for(cfg, param_count: int | None = None) -> dict[str, Any]:
+    """Pick parameter rules by model scale (FSDP for the big archs)."""
+    from ..models.registry import count_params
+
+    n = param_count if param_count is not None else count_params(cfg)
+    return FSDP_RULES if n >= 1e10 else TP_RULES
+
+
+def _resolve(name, rules):
+    axes = rules.get(name, None) if name is not None else None
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes)
+
+
+def logical_to_pspec(logical, rules: Mapping[str, Any], mesh: Mesh,
+                     shape) -> P:
+    """Map a logical-axis tuple to a PartitionSpec valid for ``shape``."""
+    used: set[str] = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        names = name if isinstance(name, tuple) else (name,)
+        axes = []
+        for n in names:
+            axes.extend(_resolve(n, rules))
+        # drop axes not in the mesh, already used, or not dividing the dim
+        kept = []
+        prod = 1
+        for a in axes:
+            if a not in mesh.shape or a in used:
+                continue
+            if dim % (prod * mesh.shape[a]) != 0:
+                continue
+            kept.append(a)
+            prod *= mesh.shape[a]
+        for a in kept:
+            used.add(a)
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    return P(*out)
+
+
+def make_constrain(mesh: Mesh, act_rules: Mapping[str, Any] | None = None):
+    """Activation-constraint callback passed into the model functions."""
+    act_rules = act_rules or ACT_RULES
+
+    def constrain(t, logical):
+        spec = logical_to_pspec(logical, act_rules, mesh, t.shape)
+        return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def param_shardings(logical_tree, mesh: Mesh, rules, shape_tree):
+    """NamedSharding pytree for parameters (same structure as params)."""
+    return jax.tree_util.tree_map(
+        lambda logical, sds: NamedSharding(
+            mesh, logical_to_pspec(logical, rules, mesh, sds.shape)),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, tuple, type(None))) for e in x),
+    )
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_shardings(specs: dict, mesh: Mesh):
+    """Shard every batch input over the data-parallel axes (dim 0)."""
+    dp = dp_axes(mesh)
+
+    def one(sds):
+        prod = 1
+        kept = []
+        for a in dp:
+            if sds.shape[0] % (prod * mesh.shape[a]) == 0:
+                kept.append(a)
+                prod *= mesh.shape[a]
+        spec = P(tuple(kept) if kept else None,
+                 *([None] * (len(sds.shape) - 1)))
+        return NamedSharding(mesh, spec)
+
+    return {k: one(v) for k, v in specs.items()}

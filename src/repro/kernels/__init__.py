@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spots."""
+from .gram import rbf_gram_pallas
+from .lk_mvm import lk_mvm_pallas
+from .ops import lk_mvm_op, rbf_gram_op
+from .ref import lk_mvm_ref, rbf_gram_ref
+
+__all__ = ["rbf_gram_pallas", "lk_mvm_pallas", "lk_mvm_op", "rbf_gram_op",
+           "lk_mvm_ref", "rbf_gram_ref"]

@@ -1,0 +1,36 @@
+"""Jitted public wrappers that dispatch Pallas kernels or jnp oracles.
+
+On TPU the Pallas path is used; elsewhere (this container is CPU-only) the
+default is the jnp oracle, with ``force_pallas=True`` running the kernels in
+interpret mode for validation.
+"""
+from __future__ import annotations
+
+import jax
+
+from .gram import rbf_gram_pallas
+from .lk_mvm import lk_mvm_pallas
+from .ref import lk_mvm_ref, rbf_gram_ref
+
+__all__ = ["lk_mvm_op", "rbf_gram_op"]
+
+
+def _use_pallas(force_pallas: bool) -> bool:
+    return force_pallas or jax.default_backend() == "tpu"
+
+
+def lk_mvm_op(K1, K2, mask, u, noise=0.0, *, force_pallas: bool = False,
+              block_n: int = 128, block_m: int = 128):
+    if _use_pallas(force_pallas):
+        return lk_mvm_pallas(K1, K2, mask, u, noise,
+                             block_n=block_n, block_m=block_m)
+    return lk_mvm_ref(K1, K2, mask, u, noise)
+
+
+def rbf_gram_op(x1, x2, lengthscale, outputscale=1.0, *,
+                force_pallas: bool = False, block_n: int = 128,
+                block_d: int = 128):
+    if _use_pallas(force_pallas):
+        return rbf_gram_pallas(x1, x2, lengthscale, outputscale,
+                               block_n=block_n, block_d=block_d)
+    return rbf_gram_ref(x1, x2, lengthscale, outputscale)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracles for the Pallas kernels (used by tests and CPU fallback)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.gp_kernels import rbf_ard
+from ..core.mvm import lk_mvm
+
+__all__ = ["lk_mvm_ref", "rbf_gram_ref"]
+
+
+def lk_mvm_ref(K1, K2, mask, u, noise=0.0):
+    """out = mask * (K1 @ (mask*u) @ K2) + noise * (mask*u)."""
+    return lk_mvm(K1, K2, mask, u, noise)
+
+
+def rbf_gram_ref(x1, x2, lengthscale, outputscale=1.0):
+    return rbf_ard(x1, x2, lengthscale, outputscale)

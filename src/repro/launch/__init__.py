@@ -1,0 +1,1 @@
+"""Production meshes, multi-pod dry-run, roofline analysis."""

@@ -1,0 +1,346 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any jax import: jax locks the device
+# count at first backend initialisation. 512 host devices stand in for the
+# 2-pod production fleet; nothing below allocates real buffers (lower/compile
+# on ShapeDtypeStructs only).
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+SPMD-partitions, and compiles on the production meshes.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_72b \
+        --shape train_4k --mesh single,multi --out artifacts/dryrun
+
+Per cell it writes a JSON artifact with compiled.memory_analysis(),
+cost_analysis(), and the collective-bytes breakdown parsed from the
+optimized HLO (see hlo_analysis.py). EXPERIMENTS.md §Dry-run and §Roofline
+are generated from these artifacts.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from ..distributed.sharding import batch_shardings, rules_for
+from ..models import active_params, build_model, count_params, make_input_specs
+from ..train.optimizers import OptConfig
+from ..train.trainer import make_serve_steps, make_train_step
+from .hlo_analysis import analyze_collectives
+from .mesh import make_production_mesh
+
+MESHES = {"single": False, "multi": True}
+
+
+def _with_shardings(specs: dict, shardings: dict):
+    return {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=shardings[k])
+            for k, v in specs.items()}
+
+
+def _opt_for(cfg):
+    # 400B-class MoE: bf16 moments + adafactor to fit v5e HBM (DESIGN.md §5).
+    n = count_params(cfg)
+    if n >= 1e11:
+        return OptConfig(name="adafactor", moments_dtype=jnp.bfloat16)
+    return OptConfig(name="adamw")
+
+
+def _accum_for(cfg, shape):
+    """Gradient-accumulation factor for train shapes.
+
+    Targets <= ~8k tokens per device per microbatch (v5e HBM budget for the
+    saved layer-boundary activations of the remat'd scan).
+    """
+    if shape.kind != "train":
+        return 1
+    tokens = shape.global_batch * shape.seq_len
+    per_dev = tokens / 16  # batch shards over the 16-wide 'data' axis
+    target = 4096 if (cfg.moe and cfg.d_model >= 7000) else 8192
+    accum = max(1, int(per_dev // target))
+    while shape.global_batch % accum:
+        accum -= 1
+    return accum
+
+
+def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+               profile: str = "optimized"):
+    """Lower + compile one cell; returns the artifact dict.
+
+    profile "baseline": the paper-faithful first implementation (einsum MoE
+    dispatch, FSDP rules for serving). "optimized": shard_map expert-parallel
+    MoE, resident serve weights, ZeRO-DP for the dense trains (§Perf).
+    """
+    from ..distributed.sharding import (SERVE_RULES, SP_ACT_RULES,
+                                        ZERO_ACT_RULES, ZERO_RULES,
+                                        set_active_mesh)
+
+    from ..distributed.sharding import SERVE_DECODE_RULES
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    rules = rules_for(cfg)
+    act_rules = None
+    if profile == "baseline":
+        serve_rules = rules
+    elif shape.kind == "decode":
+        serve_rules = SERVE_DECODE_RULES
+    else:
+        # prefill: token-heavy, so FSDP weight gathers amortise for dense
+        # archs (iter-5: resident-TP regressed qwen2 prefill 13->27 s);
+        # MoE keeps SERVE_RULES (expert residency is the 28x win there).
+        serve_rules = SERVE_RULES if cfg.moe else rules
+    if profile == "baseline":
+        set_active_mesh(None)  # einsum MoE dispatch path
+    if profile == "optimized" and shape.kind == "train" \
+            and not cfg.moe and count_params(cfg) >= 1e10:
+        # ZeRO-DP hillclimb: both axes data-parallel, weights 256-way sharded
+        rules, act_rules = ZERO_RULES, ZERO_ACT_RULES
+    if profile == "optimized" and shape.kind == "train" and cfg.moe:
+        act_rules = SP_ACT_RULES  # sequence-parallel layer boundaries
+    specs = make_input_specs(cfg, shape)
+    t0 = time.time()
+
+    grad_accum = _accum_for(cfg, shape)
+    if profile == "optimized" and act_rules is ZERO_ACT_RULES:
+        grad_accum = 1  # 256-way DP: 4k tokens/chip fit without accumulation
+    if shape.kind == "train":
+        setup = make_train_step(model, mesh, opt_cfg=_opt_for(cfg),
+                                rules=rules, act_rules=act_rules,
+                                grad_accum=grad_accum)
+        state_shapes = jax.eval_shape(setup.init_state, jax.random.key(0))
+        state_in = jax.tree_util.tree_map(
+            lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                                 sharding=sh),
+            state_shapes, setup.state_shardings)
+        batch_in = _with_shardings(specs, batch_shardings(specs, mesh))
+        with mesh:
+            lowered = setup.step_fn.lower(state_in, batch_in)
+    else:
+        serve = make_serve_steps(model, mesh, rules=serve_rules,
+                                 max_len=shape.seq_len)
+        p_shapes = jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
+        p_in = jax.tree_util.tree_map(
+            lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                                 sharding=sh),
+            p_shapes, serve["param_shardings"])
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        cache_sh = serve["cache_shardings"](
+            shape.global_batch,
+            prefer="time" if shape.kind == "decode" else "width")
+        vocab_ok = cfg.vocab_size % mesh.shape.get("model", 1) == 0
+        logits_sh = NamedSharding(mesh, P(None, "model" if vocab_ok else None))
+        if shape.kind == "prefill":
+            batch_in = _with_shardings(specs, batch_shardings(specs, mesh))
+            fn = jax.jit(serve["prefill"],
+                         in_shardings=(serve["param_shardings"],
+                                       {k: v.sharding for k, v in
+                                        batch_in.items()}),
+                         out_shardings=(logits_sh, cache_sh))
+            with mesh:
+                lowered = fn.lower(p_in, batch_in)
+        else:
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cache_in = jax.tree_util.tree_map(
+                lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                                     sharding=sh),
+                cache_shapes, cache_sh)
+            batch_in = _with_shardings(specs, batch_shardings(specs, mesh))
+            fn = jax.jit(serve["decode_step"], donate_argnums=(1,),
+                         out_shardings=(logits_sh, cache_sh))
+            with mesh:
+                lowered = fn.lower(p_in, cache_in, batch_in["tokens"])
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    n_dev = mesh.devices.size
+    stats = analyze_collectives(compiled.as_text(), n_dev)
+    # layer-scan trip count x grad-accum loop (see hlo_analysis caveats)
+    body_mult = cfg.num_layers * max(1, grad_accum)
+
+    artifact = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "num_devices": int(n_dev),
+        "params": count_params(cfg),
+        "active_params": active_params(cfg),
+        "grad_accum": grad_accum,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost_analysis": {
+            "flops_per_device": float(cost.get("flops", -1.0)),
+            "bytes_accessed_per_device": float(cost.get("bytes accessed",
+                                                        -1.0)),
+        },
+        "memory_analysis": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "collectives": {
+            "raw": {k: dict(count=v[0], result_bytes=v[1], wire_bytes=v[2])
+                    for k, v in {**stats.entry}.items()},
+            "in_loop_bodies": {k: dict(count=v[0], result_bytes=v[1],
+                                       wire_bytes=v[2])
+                               for k, v in {**stats.body}.items()},
+            "body_multiplier": body_mult,
+            "totals": stats.totals(body_mult),
+            "total_wire_bytes_per_device": stats.total_wire_bytes(body_mult),
+        },
+    }
+    return artifact
+
+
+def lower_lkgp_cell(mesh, mesh_name: str, n: int = 8192, m: int = 100,
+                    d: int = 16, dtype=None):
+    """The paper's own technique on the production mesh: one distributed
+    latent-Kronecker CG fit step (row-sharded configs, see DESIGN.md §3).
+
+    Roofline unit = one CG iteration (the while-loop body, which matches
+    XLA's loop-body-once cost accounting).
+    """
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..distributed.lkgp_dist import dist_mll_value
+
+    dtype = dtype or jnp.float32  # TPU adaptation: fp32 (see DESIGN.md §3)
+    row = NamedSharding(mesh, P("data", None))
+    rep = NamedSharding(mesh, P())
+    X = jax.ShapeDtypeStruct((n, d), dtype, sharding=row)
+    Y = jax.ShapeDtypeStruct((n, m), dtype, sharding=row)
+    mask = jax.ShapeDtypeStruct((n, m), dtype, sharding=row)
+    t = jax.ShapeDtypeStruct((m,), dtype, sharding=rep)
+    ls = jax.ShapeDtypeStruct((d,), dtype, sharding=rep)
+    sc = jax.ShapeDtypeStruct((), dtype, sharding=rep)
+
+    def fit_quad(ls_, tls, os_, noise, X_, t_, Y_, mask_):
+        return dist_mll_value(mesh, ls_, tls, os_, noise, X_, t_, Y_, mask_)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fit_quad).lower(ls, sc, sc, sc, X, t, Y, mask)
+        compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    stats = analyze_collectives(compiled.as_text(), mesh.devices.size)
+    chips = int(mesh.devices.size)
+    # analytic per-CG-iteration costs (the MVM dominates)
+    mvm_flops = (2 * n * n * m + 2 * n * m * m) / chips
+    ag_bytes = n * m * dtype(0).dtype.itemsize * (chips - 1) / chips
+    return {
+        "arch": "lkgp", "shape": f"fit_n{n}_m{m}", "mesh": mesh_name,
+        "num_devices": chips, "params": 0, "active_params": 0,
+        "grad_accum": 1,
+        "analytic_per_cg_iter": {
+            "flops_per_chip": mvm_flops,
+            "allgather_bytes_per_chip": ag_bytes,
+        },
+        "cost_analysis": {
+            "flops_per_device": float(cost.get("flops", -1.0)),
+            "bytes_accessed_per_device": float(cost.get("bytes accessed",
+                                                        -1.0)),
+        },
+        "memory_analysis": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "collectives": {
+            "raw": {k: dict(count=v[0], result_bytes=v[1], wire_bytes=v[2])
+                    for k, v in {**stats.entry}.items()},
+            "in_loop_bodies": {k: dict(count=v[0], result_bytes=v[1],
+                                       wire_bytes=v[2])
+                               for k, v in {**stats.body}.items()},
+            "body_multiplier": 1,
+            "totals": stats.totals(1.0),
+            "total_wire_bytes_per_device": stats.total_wire_bytes(1.0),
+        },
+        "compile_s": round(time.time() - t0, 2),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="comma list or 'all'")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--profile", default="optimized",
+                    choices=["baseline", "optimized"])
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--fail-fast", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+    os.makedirs(args.out, exist_ok=True)
+
+    results = []
+    for mesh_name in meshes:
+        mesh = make_production_mesh(multi_pod=MESHES[mesh_name])
+        if "lkgp" in archs:
+            art = lower_lkgp_cell(mesh, mesh_name)
+            path = os.path.join(args.out, f"lkgp__fit__{mesh_name}.json")
+            with open(path, "w") as f:
+                json.dump(art, f, indent=1)
+            print(f"OK    lkgp                     fit_8k       {mesh_name:6s} "
+                  f"compile={art['compile_s']:7.1f}s "
+                  f"temp/dev={art['memory_analysis']['temp_bytes_per_device']/2**30:6.2f}GiB",
+                  flush=True)
+        for arch in archs:
+            if arch == "lkgp":
+                continue
+            for shape_name in shapes:
+                if not shape_applicable(arch, shape_name):
+                    print(f"SKIP  {arch:24s} {shape_name:12s} {mesh_name}"
+                          " (inapplicable: full attention at 500k)")
+                    continue
+                path = os.path.join(args.out,
+                                    f"{arch}__{shape_name}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"HAVE  {arch:24s} {shape_name:12s} {mesh_name}")
+                    continue
+                try:
+                    art = lower_cell(arch, shape_name, mesh, mesh_name,
+                                     profile=args.profile)
+                    with open(path, "w") as f:
+                        json.dump(art, f, indent=1)
+                    ma = art["memory_analysis"]
+                    print(f"OK    {arch:24s} {shape_name:12s} {mesh_name:6s} "
+                          f"compile={art['compile_s']:7.1f}s "
+                          f"args/dev={ma['argument_bytes_per_device']/2**30:6.2f}GiB "
+                          f"temp/dev={ma['temp_bytes_per_device']/2**30:6.2f}GiB "
+                          f"flops/dev={art['cost_analysis']['flops_per_device']:.3e}",
+                          flush=True)
+                    results.append((arch, shape_name, mesh_name, "OK"))
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    print(f"FAIL  {arch:24s} {shape_name:12s} {mesh_name}: "
+                          f"{type(e).__name__}: {e}", flush=True)
+                    traceback.print_exc()
+                    results.append((arch, shape_name, mesh_name, "FAIL"))
+                    if args.fail_fast:
+                        raise
+    ok = sum(1 for r in results if r[-1] == "OK")
+    print(f"\ndry-run: {ok}/{len(results)} cells compiled")
+    if any(r[-1] == "FAIL" for r in results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

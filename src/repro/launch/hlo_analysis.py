@@ -1,0 +1,133 @@
+"""Post-SPMD HLO text analysis: collective bytes and schedules.
+
+``compiled.cost_analysis()`` does not report communication, so we parse the
+optimized (per-device) HLO module for all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops and sum their sizes.
+
+Two caveats handled explicitly:
+  * XLA counts loop bodies ONCE. Collectives are reported per computation;
+    callers multiply non-entry-computation collectives by the loop trip
+    count (for these models: the layer scan).
+  * Sizes: we record RESULT shape bytes per op; ``wire_bytes`` converts to
+    bytes actually crossing links with standard ring-algorithm factors.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = ["CollectiveStats", "analyze_collectives", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)[^{]*\{", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclass
+class CollectiveStats:
+    # kind -> [count, result_bytes, wire_bytes] aggregated
+    entry: dict = field(default_factory=lambda: defaultdict(lambda: [0, 0, 0]))
+    body: dict = field(default_factory=lambda: defaultdict(lambda: [0, 0, 0]))
+
+    def totals(self, body_multiplier: float = 1.0):
+        out = {}
+        for kind in set(self.entry) | set(self.body):
+            e = self.entry.get(kind, [0, 0, 0])
+            b = self.body.get(kind, [0, 0, 0])
+            out[kind] = {
+                "count": e[0] + b[0] * body_multiplier,
+                "result_bytes": e[1] + b[1] * body_multiplier,
+                "wire_bytes": e[2] + b[2] * body_multiplier,
+            }
+        return out
+
+    def total_wire_bytes(self, body_multiplier: float = 1.0) -> float:
+        return sum(v["wire_bytes"]
+                   for v in self.totals(body_multiplier).values())
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in DTYPE_BYTES:
+        return 0
+    if not dims:
+        return DTYPE_BYTES[dtype]
+    return DTYPE_BYTES[dtype] * int(np.prod([int(d) for d in dims.split(",")]))
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]<=[N]
+    m = _GROUPS_OLD_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _wire_bytes(kind: str, result_bytes: int, p: int) -> float:
+    """Ring-algorithm bytes per participating device."""
+    if p <= 1:
+        return 0.0
+    r = (p - 1) / p
+    if kind == "all-gather":
+        return result_bytes * r              # each device receives (p-1)/p
+    if kind == "all-reduce":
+        return 2.0 * result_bytes * r        # reduce-scatter + all-gather
+    if kind == "reduce-scatter":
+        return result_bytes * r * p          # operand = result * p
+    if kind == "all-to-all":
+        return result_bytes * r
+    if kind == "collective-permute":
+        return float(result_bytes)
+    return float(result_bytes)
+
+
+def analyze_collectives(hlo_text: str, num_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    current_comp = ""
+    is_entry = False
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("ENTRY"):
+            is_entry = True
+            continue
+        if stripped.startswith("}"):
+            if line.startswith("}"):
+                is_entry = False
+            continue
+        if not is_entry and line and not line.startswith(" "):
+            # a new (non-entry) computation header
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(4)
+        if "-done(" in line:   # size counted at -start
+            continue
+        # result shape: tuple (async pairs) or single
+        if m.group(1) is not None:
+            shapes = _SHAPE_RE.findall(m.group(1))
+            rbytes = max((_shape_bytes(d, s) for d, s in shapes), default=0)
+        else:
+            rbytes = _shape_bytes(m.group(2), m.group(3))
+        p = _group_size(line, num_devices)
+        wire = _wire_bytes(kind, rbytes, p)
+        bucket = stats.entry if is_entry else stats.body
+        bucket[kind][0] += 1
+        bucket[kind][1] += rbytes
+        bucket[kind][2] += wire
+    return stats

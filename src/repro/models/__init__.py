@@ -1,0 +1,5 @@
+"""The 10 assigned LM architectures, pure JAX with scan-over-layers."""
+from .registry import Model, active_params, build_model, count_params, make_input_specs
+
+__all__ = ["Model", "active_params", "build_model", "count_params",
+           "make_input_specs"]

@@ -1,0 +1,339 @@
+"""Griffin-style hybrid (RecurrentGemma-2B): RG-LRU recurrent blocks + local
+sliding-window MQA, pattern (rec, rec, attn) cycled over layers.
+
+Recurrent block (Griffin, De et al. 2024):
+    y  = GeLU(W_y x)                       (B, S, R)
+    z  = W_x x -> causal depthwise conv(4) -> RG-LRU -> h
+    out = W_o (y * h)
+RG-LRU:
+    r_t = sigmoid(W_a z_t + b_a);  i_t = sigmoid(W_i z_t + b_i)
+    log a_t = -c * r_t * softplus(lam)          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * z_t)
+computed with jax.lax.associative_scan over time for train/prefill and a
+single fused step for decode. The attention layers cache only ``window``
+K/V entries (rotating buffer), which is what makes the 500k-token decode
+shape feasible for this arch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (apply_rope, attention, chunked_ce_loss, mlp, mlp_params,
+                     rms_norm, rope)
+from .transformer import _assign, build_params, table_logical
+
+__all__ = ["griffin_param_table", "griffin_loss", "griffin_prefill",
+           "griffin_decode_step", "init_griffin_cache", "GriffinCache"]
+
+_LRU_C = 8.0
+
+
+class GriffinCache(NamedTuple):
+    h: jnp.ndarray        # (L, B, R)   RG-LRU hidden state
+    conv: jnp.ndarray     # (L, B, W_conv-1, R) conv tail
+    k: jnp.ndarray        # (L, B, W, Hkv, Dh) rotating window K
+    v: jnp.ndarray        # (L, B, W, Hkv, Dh)
+    pos: jnp.ndarray      # (L, B, W) absolute positions in the buffer
+    length: jnp.ndarray   # scalar int32
+
+
+def griffin_layer_table(cfg):
+    D, R = cfg.d_model, cfg.rnn_width
+    Hq, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    t = {
+        # recurrent branch (present in every layer; attn layers ignore)
+        "rec/ln": ((D,), ("embed",), None),
+        "rec/wy": ((D, R), ("embed", "rnn"), D),
+        "rec/wx": ((D, R), ("embed", "rnn"), D),
+        "rec/conv_w": ((cfg.conv_width, R), (None, "rnn"), None),
+        "rec/conv_b": ((R,), ("rnn",), None),
+        "rec/wa": ((R, R), ("rnn", "rnn_in"), R),
+        "rec/ba": ((R,), ("rnn",), None),
+        "rec/wi": ((R, R), ("rnn", "rnn_in"), R),
+        "rec/bi": ((R,), ("rnn",), None),
+        "rec/lam": ((R,), ("rnn",), None),
+        "rec/wo": ((R, D), ("rnn", "embed"), R),
+        # local attention branch
+        "attn/ln": ((D,), ("embed",), None),
+        "attn/wq": ((D, Hq * Dh), ("embed", "heads_fused"), D),
+        "attn/wk": ((D, Hkv * Dh), ("embed", "kv_fused"), D),
+        "attn/wv": ((D, Hkv * Dh), ("embed", "kv_fused"), D),
+        "attn/wo": ((Hq * Dh, D), ("heads_fused", "embed"), Hq * Dh),
+        # shared MLP
+        "mlp_ln": ((D,), ("embed",), None),
+    }
+    for k, v in mlp_params(cfg.mlp_act, cfg.d_model, cfg.d_ff).items():
+        t[f"mlp/{k}"] = v
+    return t
+
+
+def griffin_param_table(cfg):
+    table = {
+        "embed": ((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), None),
+        "final_norm": ((cfg.d_model,), ("embed",), None),
+    }
+    for k, v in griffin_layer_table(cfg).items():
+        shape, logical, fan = v
+        table[f"layers/{k}"] = ((cfg.num_layers, *shape),
+                                ("layers", *logical), fan)
+    return table
+
+
+# --------------------------------------------------------------------------
+# RG-LRU
+# --------------------------------------------------------------------------
+def _rglru_gates(z, p):
+    r = jax.nn.sigmoid(
+        (jnp.einsum("bsr,rq->bsq", z, p["wa"]) + p["ba"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(
+        (jnp.einsum("bsr,rq->bsq", z, p["wi"]) + p["bi"]).astype(jnp.float32))
+    log_a = -_LRU_C * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * z.astype(jnp.float32))
+    return a, gated
+
+
+def _rglru_scan(z, p):
+    """z: (B, S, R) -> h: (B, S, R) via associative scan over time."""
+    a, b = _rglru_gates(z, p)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(z.dtype)
+
+
+def _causal_conv(z, w, b, tail=None):
+    """Depthwise causal conv along time. z: (B, S, R); w: (K, R)."""
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((z.shape[0], K - 1, z.shape[2]), z.dtype)
+    zp = jnp.concatenate([tail, z], axis=1)
+    out = sum(zp[:, i:i + z.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return (out + b[None, None, :]).astype(z.dtype), zp[:, -(K - 1):, :]
+
+
+def _rec_block(x, p, cfg, h0=None, conv_tail=None):
+    """Returns (out, h_last, new_conv_tail)."""
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    y = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", xn, p["wy"]).astype(jnp.float32),
+                    approximate=True).astype(x.dtype)
+    z = jnp.einsum("bsd,dr->bsr", xn, p["wx"])
+    z, new_tail = _causal_conv(z, p["conv_w"], p["conv_b"], conv_tail)
+    if h0 is None:
+        h = _rglru_scan(z, p)
+    else:  # single decode step: S == 1
+        a, b = _rglru_gates(z, p)
+        h = (a * h0[:, None, :] + b).astype(x.dtype)
+    out = jnp.einsum("bsr,rd->bsd", (y * h).astype(x.dtype), p["wo"])
+    return out, h[:, -1, :].astype(jnp.float32), new_tail
+
+
+def _attn_block(x, p, cfg, cos, sin):
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    B, S, _ = xn.shape
+    Hq, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", xn, p["wq"]).reshape(B, S, Hq, Dh)
+    k = jnp.einsum("bsd,dh->bsh", xn, p["wk"]).reshape(B, S, Hkv, Dh)
+    v = jnp.einsum("bsd,dh->bsh", xn, p["wv"]).reshape(B, S, Hkv, Dh)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    a = attention(q, k, v, causal=True, window=cfg.window,
+                  q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    out = jnp.einsum("bsh,hd->bsd", a.reshape(B, S, -1), p["wo"])
+    return out, k, v
+
+
+def _is_attn(cfg, li):
+    pat = cfg.block_pattern
+    return pat[li % len(pat)] == "attn"
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+def griffin_forward(params, tokens, cfg, constrain=lambda t, n: t):
+    x = params["embed"].astype(cfg.dtype_act)[tokens]
+    x = x * math.sqrt(cfg.d_model)
+    x = constrain(x, (("batch",), None, "embed"))
+    S = x.shape[1]
+    cos, sin = rope(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+    pat = len(cfg.block_pattern)
+
+    def rec_branch(h, lp):
+        out, _, _ = _rec_block(h, lp["rec"], cfg)
+        return h + constrain(out, (("batch",), None, "embed"))
+
+    def attn_branch(h, lp):
+        out, _, _ = _attn_block(h, lp["attn"], cfg, cos, sin)
+        return h + constrain(out, (("batch",), None, "embed"))
+
+    def body(carry, lp):
+        h, li = carry
+        branches = [attn_branch if b == "attn" else rec_branch
+                    for b in cfg.block_pattern]
+        h = jax.lax.switch(li % pat, branches, h, lp)
+        hn = rms_norm(h, lp["mlp_ln"], cfg.norm_eps)
+        h = h + constrain(mlp(hn, lp["mlp"], cfg.mlp_act),
+                          (("batch",), None, "embed"))
+        return (h, li + 1), None
+
+    scan_body = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    (x, _), _ = jax.lax.scan(scan_body, (x, jnp.int32(0)), params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def griffin_loss(params, batch, cfg, constrain=lambda t, n: t):
+    x = griffin_forward(params, batch["tokens"], cfg, constrain)
+    return chunked_ce_loss(x, params["embed"].astype(cfg.dtype_act),
+                           batch["labels"], chunk=cfg.loss_chunk,
+                           logit_cap=cfg.final_logit_cap)
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+def init_griffin_cache(cfg, batch, dtype):
+    L, R, W = cfg.num_layers, cfg.rnn_width, cfg.window
+    Hkv, Dh = cfg.num_kv_heads, cfg.head_dim
+    return GriffinCache(
+        h=jnp.zeros((L, batch, R), jnp.float32),
+        conv=jnp.zeros((L, batch, cfg.conv_width - 1, R), dtype),
+        k=jnp.zeros((L, batch, W, Hkv, Dh), dtype),
+        v=jnp.zeros((L, batch, W, Hkv, Dh), dtype),
+        pos=jnp.full((L, batch, W), -10**9, jnp.int32),
+        length=jnp.int32(0),
+    )
+
+
+def _windowed_decode_attention(q, kbuf, vbuf, posbuf, cur_pos, window):
+    """q: (B,1,Hq,Dh); kbuf/vbuf: (B,W,Hkv,Dh); posbuf: (B,W)."""
+    B, W, Hkv, Dh = kbuf.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, Dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kbuf).astype(jnp.float32)
+    s = s / math.sqrt(Dh)
+    valid = (posbuf <= cur_pos) & (posbuf > cur_pos - window)
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(vbuf.dtype), vbuf)
+    return out.reshape(B, 1, Hq, Dh)
+
+
+def griffin_decode_step(params, cache: GriffinCache, tokens, cfg,
+                        constrain=lambda t, n: t):
+    x = params["embed"].astype(cfg.dtype_act)[tokens] * math.sqrt(cfg.d_model)
+    pos = cache.length
+    cos, sin = rope(jnp.arange(1) + pos, cfg.head_dim, cfg.rope_theta)
+    slot = pos % cfg.window
+    pat = len(cfg.block_pattern)
+
+    def rec_branch(h, lp, st):
+        h0, tail, k, v, pb = st
+        out, h_new, tail_new = _rec_block(h, lp["rec"], cfg, h0=h0,
+                                          conv_tail=tail)
+        return h + out, (h_new, tail_new, k, v, pb)
+
+    def attn_branch(h, lp, st):
+        h0, tail, kbuf, vbuf, pb = st
+        xn = rms_norm(h, lp["attn"]["ln"], cfg.norm_eps)
+        B = xn.shape[0]
+        Hq, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        q = jnp.einsum("bsd,dh->bsh", xn, lp["attn"]["wq"]).reshape(B, 1, Hq, Dh)
+        k = jnp.einsum("bsd,dh->bsh", xn, lp["attn"]["wk"]).reshape(B, 1, Hkv, Dh)
+        v = jnp.einsum("bsd,dh->bsh", xn, lp["attn"]["wv"]).reshape(B, 1, Hkv, Dh)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        z = jnp.zeros((), slot.dtype)
+        kbuf = jax.lax.dynamic_update_slice(kbuf, k.astype(kbuf.dtype),
+                                            (z, slot, z, z))
+        vbuf = jax.lax.dynamic_update_slice(vbuf, v.astype(vbuf.dtype),
+                                            (z, slot, z, z))
+        pb = jax.lax.dynamic_update_slice(
+            pb, jnp.full((B, 1), pos, jnp.int32), (z, slot))
+        a = _windowed_decode_attention(q, kbuf, vbuf, pb, pos, cfg.window)
+        out = jnp.einsum("bsh,hd->bsd", a.reshape(B, 1, -1), lp["attn"]["wo"])
+        return h + out, (h0, tail, kbuf, vbuf, pb)
+
+    def body(carry, inp):
+        h, li = carry
+        lp, st = inp[0], inp[1:]
+        branches = [attn_branch if b == "attn" else rec_branch
+                    for b in cfg.block_pattern]
+        h, st = jax.lax.switch(li % pat, branches, h, lp, st)
+        hn = rms_norm(h, lp["mlp_ln"], cfg.norm_eps)
+        h = h + mlp(hn, lp["mlp"], cfg.mlp_act)
+        return (h, li + 1), st
+
+    (x, _), (hs, tails, ks, vs, pbs) = jax.lax.scan(
+        body, (x, jnp.int32(0)),
+        (params["layers"], cache.h, cache.conv, cache.k, cache.v, cache.pos))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    if cfg.final_logit_cap is not None:
+        logits = cfg.final_logit_cap * jnp.tanh(logits / cfg.final_logit_cap)
+    new_cache = GriffinCache(h=hs, conv=tails, k=ks, v=vs, pos=pbs,
+                             length=cache.length + 1)
+    return logits[:, 0], new_cache
+
+
+def griffin_prefill(params, batch, cfg, constrain=lambda t, n: t):
+    """Prompt pass returning (last logits, cache) — full state version."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"].astype(cfg.dtype_act)[tokens] * math.sqrt(cfg.d_model)
+    cos, sin = rope(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+    W = cfg.window
+    pat = len(cfg.block_pattern)
+    cache0 = init_griffin_cache(cfg, B, cfg.dtype_act)
+
+    def rec_branch(h, lp):
+        out, h_last, tail = _rec_block(h, lp["rec"], cfg)
+        zeros_k = jnp.zeros((B, W, cfg.num_kv_heads, cfg.head_dim), h.dtype)
+        pb = jnp.full((B, W), -10**9, jnp.int32)
+        return h + out, (h_last, tail, zeros_k, zeros_k, pb)
+
+    def attn_branch(h, lp):
+        out, k, v = _attn_block(h, lp["attn"], cfg, cos, sin)
+        # keep the last W positions in rotating-slot order (slot = pos % W)
+        last = jnp.arange(W)
+        src_pos = S - W + ((last - S % W) % W) if S >= W else last
+        take = jnp.clip(src_pos, 0, S - 1)
+        kw = k[:, take, :, :]
+        vw = v[:, take, :, :]
+        pb = jnp.where(src_pos >= 0, src_pos, -10**9)[None, :].repeat(B, 0) \
+            if S >= W else jnp.where(last < S, last, -10**9)[None, :].repeat(B, 0)
+        h_last = jnp.zeros((B, cfg.rnn_width), jnp.float32)
+        tail = jnp.zeros((B, cfg.conv_width - 1, cfg.rnn_width), h.dtype)
+        return h + out, (h_last, tail, kw.astype(h.dtype), vw.astype(h.dtype),
+                         pb.astype(jnp.int32))
+
+    def body(carry, lp):
+        h, li = carry
+        branches = [attn_branch if b == "attn" else rec_branch
+                    for b in cfg.block_pattern]
+        h, st = jax.lax.switch(li % pat, branches, h, lp)
+        hn = rms_norm(h, lp["mlp_ln"], cfg.norm_eps)
+        h = h + mlp(hn, lp["mlp"], cfg.mlp_act)
+        return (h, li + 1), st
+
+    scan_body = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    (x, _), (hs, tails, ks, vs, pbs) = jax.lax.scan(
+        scan_body, (x, jnp.int32(0)), params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"].astype(x.dtype))
+    if cfg.final_logit_cap is not None:
+        logits = cfg.final_logit_cap * jnp.tanh(logits / cfg.final_logit_cap)
+    cache = GriffinCache(h=hs, conv=tails, k=ks, v=vs, pos=pbs,
+                         length=jnp.int32(S))
+    return logits, cache

@@ -1,0 +1,252 @@
+"""Shared neural-net layers (pure JAX, functional, dtype-explicit).
+
+Conventions:
+  * activations: (batch, seq, d_model), dtype = cfg activation dtype (bf16).
+  * attention weights are computed in fp32 (softmax stability), outputs cast
+    back to the activation dtype.
+  * long sequences use chunked (flash-style) attention: nested scans over
+    query/key blocks with an online softmax, wrapped in jax.checkpoint so the
+    backward pass recomputes scores instead of saving (Sq, Sk) tensors.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "layer_norm", "rope", "apply_rope", "mlp", "mlp_params",
+           "attention", "decode_attention", "chunked_ce_loss", "Cache"]
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embeddings
+# --------------------------------------------------------------------------
+def rope(positions, head_dim, theta=10_000.0, dtype=jnp.float32):
+    """positions: (..., S) -> cos, sin of shape (..., S, head_dim/2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(angles).astype(dtype), jnp.sin(angles).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, Dh); cos/sin: (B, S, Dh/2) or (S, Dh/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+def mlp(x, params, act: str):
+    """act in {swiglu, geglu, gelu, relu2}. Gated acts use wi_0 (gate) & wi_1."""
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, params["wi_0"])
+        u = jnp.einsum("bsd,df->bsf", x, params["wi_1"])
+        g = jax.nn.silu(g.astype(jnp.float32)) if act == "swiglu" else \
+            jax.nn.gelu(g.astype(jnp.float32), approximate=True)
+        h = (g * u.astype(jnp.float32)).astype(x.dtype)
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, params["wi_0"])
+        if act == "gelu":
+            h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+        elif act == "relu2":  # squared ReLU (Nemotron-4)
+            h32 = jnp.maximum(h.astype(jnp.float32), 0.0)
+            h = (h32 * h32).astype(x.dtype)
+        else:
+            raise ValueError(act)
+        if "bi_0" in params:
+            h = h + params["bi_0"].astype(h.dtype)
+    out = jnp.einsum("bsf,fd->bsd", h, params["wo"])
+    if "bo" in params:
+        out = out + params["bo"].astype(out.dtype)
+    return out
+
+
+def mlp_params(act: str, d_model: int, d_ff: int, bias: bool = False):
+    """(name -> (shape, logical_axes, fan_in)) table entries for an MLP."""
+    table = {}
+    if act in ("swiglu", "geglu"):
+        table["wi_0"] = ((d_model, d_ff), ("embed", "mlp"), d_model)
+        table["wi_1"] = ((d_model, d_ff), ("embed", "mlp"), d_model)
+    else:
+        table["wi_0"] = ((d_model, d_ff), ("embed", "mlp"), d_model)
+        if bias:
+            table["bi_0"] = ((d_ff,), ("mlp",), None)
+    table["wo"] = ((d_ff, d_model), ("mlp", "embed"), d_ff)
+    if bias:
+        table["bo"] = ((d_model,), ("embed",), None)
+    return table
+
+
+# --------------------------------------------------------------------------
+# attention (training / prefill)
+# --------------------------------------------------------------------------
+def _plain_attention(q, k, v, causal, window, q_offset):
+    """q: (B, Sq, Hq, Dh), k/v: (B, Sk, Hkv, Dh). Full score matrix."""
+    B, Sq, Hq, Dh = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, Dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / math.sqrt(Dh)
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hq, Dh)
+
+
+def _chunked_attention(q, k, v, causal, window, q_chunk, kv_chunk):
+    """Flash-style two-level scan with online softmax; O(cq*ck) score memory."""
+    B, Sq, Hq, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    qs = q.reshape(B, nq, q_chunk, Hkv, G, Dh)
+    ks = k.reshape(B, nk, kv_chunk, Hkv, Dh)
+    vs = v.reshape(B, nk, kv_chunk, Hkv, Dh)
+    scale = 1.0 / math.sqrt(Dh)
+
+    def q_block(qi, qb):
+        # qb: (B, cq, Hkv, G, Dh)
+        m0 = jnp.full((B, Hkv, G, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, q_chunk, Dh), jnp.float32)
+
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kb, vb = inp
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb).astype(jnp.float32) * scale
+            qpos = qi * q_chunk + jnp.arange(q_chunk)[:, None]
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)[None, :]
+            msk = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                msk &= kpos <= qpos
+            if window is not None:
+                msk &= kpos > qpos - window
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            corr = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        idx = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (idx, jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.einsum("bhgqd->bqhgd", out)  # (B, cq, Hkv, G, Dh)
+
+    outs = jax.lax.map(lambda i: q_block(i, qs[:, i]), jnp.arange(nq))
+    out = jnp.einsum("nbqhgd->bnqhgd", outs).reshape(B, Sq, Hq, Dh)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None, q_offset=0,
+              q_chunk=512, kv_chunk=1024):
+    """Dispatch between plain and chunked attention on sequence length."""
+    Sq, Sk = q.shape[1], k.shape[1]
+    if Sq <= max(q_chunk, 1024) or Sq % q_chunk or Sk % kv_chunk:
+        return _plain_attention(q, k, v, causal, window, q_offset)
+    return _chunked_attention(q, k, v, causal, window, q_chunk, kv_chunk)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, window=None):
+    """Single-token attention against a (possibly windowed) KV cache.
+
+    q: (B, 1, Hq, Dh); k/v_cache: (B, T, Hkv, Dh); cache_len: scalar count of
+    valid entries (new token already written at cache_len - 1).
+    """
+    B, T, Hkv, Dh = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, 1, Hkv, G, Dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache).astype(jnp.float32)
+    s = s / math.sqrt(Dh)
+    kpos = jnp.arange(T)
+    valid = kpos < cache_len
+    if window is not None:
+        valid &= kpos >= cache_len - window
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, Hq, Dh)
+
+
+# --------------------------------------------------------------------------
+# loss
+# --------------------------------------------------------------------------
+def chunked_ce_loss(x, embed, labels, *, chunk=512, logit_cap=None):
+    """Cross-entropy with the logits computed per sequence chunk.
+
+    Avoids materialising the full (B, S, vocab) fp32 logits tensor (vocab up
+    to 256k here). x: (B, S, D); embed: (V, D) tied output head; labels
+    (B, S) with -1 = ignore.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    nchunk = S // chunk if S % chunk == 0 else 1
+    if S % chunk != 0:
+        chunk = S
+    xs = x.reshape(B, nchunk, chunk, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, nchunk, chunk).transpose(1, 0, 2)
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, inp):
+        xc, lc = inp
+        logits = jnp.einsum("bsd,vd->bsv", xc, embed).astype(jnp.float32)
+        if logit_cap is not None:
+            logits = logit_cap * jnp.tanh(logits / logit_cap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        nll = (lse - gold) * valid
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(valid)), None
+
+    (total, count), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                     (xs, ls))
+    return total / jnp.maximum(count, 1.0)
+
+
+class Cache(NamedTuple):
+    """Decode-time KV cache for one attention stack (stacked over layers)."""
+    k: jnp.ndarray        # (L, B, T, Hkv, Dh)
+    v: jnp.ndarray        # (L, B, T, Hkv, Dh)
+    length: jnp.ndarray   # scalar int32: number of valid positions

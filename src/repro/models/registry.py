@@ -1,0 +1,162 @@
+"""Model zoo registry: build any assigned architecture behind one interface.
+
+``build_model(cfg)`` returns a ``Model`` with functional endpoints:
+    init(key)                      -> params
+    loss(params, batch)            -> scalar        (train shapes)
+    prefill(params, batch)         -> (logits, cache)
+    decode_step(params, cache, tk) -> (logits, cache)
+    init_cache(batch, max_len)     -> cache pytree
+plus the parameter table / logical-axis tree used by the sharding rules.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, griffin, rwkv, transformer
+
+__all__ = ["Model", "build_model", "count_params", "active_params",
+           "make_input_specs"]
+
+
+class Model(NamedTuple):
+    cfg: Any
+    param_table: dict
+    logical: dict
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+
+
+def _wrap(fn, cfg):
+    return functools.partial(fn, cfg=cfg)
+
+
+def build_model(cfg) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        table = transformer.decoder_param_table(cfg)
+        return Model(
+            cfg=cfg, param_table=table,
+            logical=transformer.table_logical(table),
+            init=lambda key, dtype=cfg.dtype_param: transformer.build_params(
+                key, table, dtype),
+            loss=lambda p, b, constrain=_ident: transformer.decoder_loss(
+                p, b, cfg, constrain),
+            prefill=lambda p, b, max_len, constrain=_ident:
+                transformer.decoder_prefill(p, b, cfg, max_len, constrain),
+            decode_step=lambda p, c, t, constrain=_ident:
+                transformer.decoder_decode_step(p, c, t, cfg, constrain),
+            init_cache=lambda batch, max_len, dtype=cfg.dtype_act:
+                transformer.init_decoder_cache(cfg, batch, max_len, dtype),
+        )
+    if fam in ("encdec", "audio"):
+        table = encdec.encdec_param_table(cfg)
+        return Model(
+            cfg=cfg, param_table=table,
+            logical=transformer.table_logical(table),
+            init=lambda key, dtype=cfg.dtype_param: transformer.build_params(
+                key, table, dtype),
+            loss=lambda p, b, constrain=_ident: encdec.encdec_loss(
+                p, b, cfg, constrain),
+            prefill=lambda p, b, max_len, constrain=_ident:
+                encdec.encdec_prefill(p, b, cfg, max_len, constrain),
+            decode_step=lambda p, c, t, constrain=_ident:
+                encdec.encdec_decode_step(p, c, t, cfg, constrain),
+            init_cache=lambda batch, max_len, dtype=cfg.dtype_act:
+                encdec.init_encdec_cache(cfg, batch, max_len, dtype),
+        )
+    if fam == "hybrid":
+        table = griffin.griffin_param_table(cfg)
+        return Model(
+            cfg=cfg, param_table=table,
+            logical=transformer.table_logical(table),
+            init=lambda key, dtype=cfg.dtype_param: transformer.build_params(
+                key, table, dtype),
+            loss=lambda p, b, constrain=_ident: griffin.griffin_loss(
+                p, b, cfg, constrain),
+            prefill=lambda p, b, max_len=None, constrain=_ident:
+                griffin.griffin_prefill(p, b, cfg, constrain),
+            decode_step=lambda p, c, t, constrain=_ident:
+                griffin.griffin_decode_step(p, c, t, cfg, constrain),
+            init_cache=lambda batch, max_len=None, dtype=cfg.dtype_act:
+                griffin.init_griffin_cache(cfg, batch, dtype),
+        )
+    if fam == "ssm":
+        table = rwkv.rwkv_param_table(cfg)
+        return Model(
+            cfg=cfg, param_table=table,
+            logical=transformer.table_logical(table),
+            init=lambda key, dtype=cfg.dtype_param: transformer.build_params(
+                key, table, dtype),
+            loss=lambda p, b, constrain=_ident: rwkv.rwkv_loss(
+                p, b, cfg, constrain),
+            prefill=lambda p, b, max_len=None, constrain=_ident:
+                rwkv.rwkv_prefill(p, b, cfg, constrain),
+            decode_step=lambda p, c, t, constrain=_ident:
+                rwkv.rwkv_decode_step(p, c, t, cfg, constrain),
+            init_cache=lambda batch, max_len=None, dtype=cfg.dtype_act:
+                rwkv.init_rwkv_cache(cfg, batch, dtype),
+        )
+    raise ValueError(f"unknown family: {fam}")
+
+
+def _ident(t, names):
+    return t
+
+
+def count_params(cfg) -> int:
+    """Total parameter count from the table (exact)."""
+    table = build_model(cfg).param_table
+    return int(sum(math.prod(shape) for shape, _, _ in table.values()))
+
+
+def active_params(cfg) -> int:
+    """Active-per-token parameters (MoE: top_k of num_experts)."""
+    total = count_params(cfg)
+    if not cfg.moe:
+        return total
+    table = build_model(cfg).param_table
+    expert = sum(math.prod(shape) for name, (shape, _, _) in table.items()
+                 if "/moe/w" in name)
+    return int(total - expert + expert * cfg.moe_top_k / cfg.num_experts)
+
+
+def make_input_specs(cfg, shape, dtype_tokens=jnp.int32):
+    """ShapeDtypeStructs for a batch of the given ShapeSpec (no allocation).
+
+    Modality frontends are stubs: whisper gets precomputed frame embeddings,
+    llava gets precomputed patch embeddings (anyres tiling), per assignment.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cfg.family in ("encdec", "audio"):
+        specs = {"frames": sds((B, cfg.enc_frames, cfg.d_model), cfg.dtype_act)}
+        if shape.kind == "train":
+            specs["tokens"] = sds((B, S), dtype_tokens)
+            specs["labels"] = sds((B, S), dtype_tokens)
+        elif shape.kind == "prefill":
+            specs["tokens"] = sds((B, S), dtype_tokens)
+        else:  # decode: one new token; cache handled by the caller
+            specs = {"tokens": sds((B, 1), dtype_tokens)}
+        return specs
+    if cfg.family == "vlm" and shape.kind != "decode":
+        P = cfg.num_patch_tokens
+        text = S - P
+        specs = {"prefix_embeds": sds((B, P, cfg.d_model), cfg.dtype_act),
+                 "tokens": sds((B, text), dtype_tokens)}
+        if shape.kind == "train":
+            specs["labels"] = sds((B, text), dtype_tokens)
+        return specs
+    if shape.kind == "train":
+        return {"tokens": sds((B, S), dtype_tokens),
+                "labels": sds((B, S), dtype_tokens)}
+    if shape.kind == "prefill":
+        return {"tokens": sds((B, S), dtype_tokens)}
+    return {"tokens": sds((B, 1), dtype_tokens)}

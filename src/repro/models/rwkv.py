@@ -1,0 +1,332 @@
+"""RWKV-6 "Finch" (attention-free, data-dependent decay), pure JAX.
+
+Time-mix (per head, head_size N = 64, H = D / N heads):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T                (state: (H, N, N))
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+with data-dependent decay w_t = exp(-exp(w_base + lora_w(x))) and
+token-shift "ddlerp" mixing (low-rank adapters) for r/k/v/w/g, following
+arXiv:2404.05892. Channel-mix uses squared-ReLU.
+
+The training path uses a sequential lax.scan over time (exact; O(1) HLO).
+A chunkwise-parallel variant is the documented perf hillclimb for the
+compute-bound cells (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import chunked_ce_loss, layer_norm
+from .transformer import _assign
+
+__all__ = ["rwkv_param_table", "rwkv_loss", "rwkv_prefill",
+           "rwkv_decode_step", "init_rwkv_cache", "RWKVCache"]
+
+_MIX_KEYS = ("r", "k", "v", "w", "g")
+_LORA = 32          # ddlerp low-rank dim
+_LORA_W = 64        # decay lora dim
+
+
+class RWKVCache(NamedTuple):
+    state: jnp.ndarray    # (L, B, H, N, N) wkv state (fp32)
+    x_tm: jnp.ndarray     # (L, B, D) last input of time-mix
+    x_cm: jnp.ndarray     # (L, B, D) last input of channel-mix
+    length: jnp.ndarray
+
+
+def rwkv_layer_table(cfg):
+    D, F = cfg.d_model, cfg.d_ff
+    t = {
+        "ln1": ((D,), ("embed",), None),
+        "ln1_b": ((D,), ("embed",), None),
+        "ln2": ((D,), ("embed",), None),
+        "ln2_b": ((D,), ("embed",), None),
+        # ddlerp mixing
+        "tm/mu_x": ((D,), ("embed",), None),
+        "tm/mu": ((5, D), (None, "embed"), None),
+        "tm/lora_a": ((D, 5 * _LORA), ("embed", None), D),
+        "tm/lora_b": ((5, _LORA, D), (None, None, "embed"), _LORA),
+        # projections
+        "tm/wr": ((D, D), ("embed", "heads_fused"), D),
+        "tm/wk": ((D, D), ("embed", "heads_fused"), D),
+        "tm/wv": ((D, D), ("embed", "heads_fused"), D),
+        "tm/wg": ((D, D), ("embed", "heads_fused"), D),
+        "tm/wo": ((D, D), ("heads_fused", "embed"), D),
+        # decay + bonus
+        "tm/w_base": ((D,), ("embed",), None),
+        "tm/w_lora_a": ((D, _LORA_W), ("embed", None), D),
+        "tm/w_lora_b": ((_LORA_W, D), (None, "embed"), _LORA_W),
+        "tm/u": ((D,), ("embed",), None),
+        # group-norm on heads after wkv
+        "tm/gn": ((D,), ("embed",), None),
+        "tm/gn_b": ((D,), ("embed",), None),
+        # channel mix
+        "cm/mu_k": ((D,), ("embed",), None),
+        "cm/mu_r": ((D,), ("embed",), None),
+        "cm/wk": ((D, F), ("embed", "mlp"), D),
+        "cm/wv": ((F, D), ("mlp", "embed"), F),
+        "cm/wr": ((D, D), ("embed", "embed_out"), D),
+    }
+    return t
+
+
+def rwkv_param_table(cfg):
+    table = {
+        "embed": ((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), None),
+        "ln0": ((cfg.d_model,), ("embed",), None),
+        "ln0_b": ((cfg.d_model,), ("embed",), None),
+        "final_norm": ((cfg.d_model,), ("embed",), None),
+        "final_norm_b": ((cfg.d_model,), ("embed",), None),
+        "head": ((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), cfg.d_model),
+    }
+    for k, v in rwkv_layer_table(cfg).items():
+        shape, logical, fan = v
+        table[f"layers/{k}"] = ((cfg.num_layers, *shape),
+                                ("layers", *logical), fan)
+    return table
+
+
+# --------------------------------------------------------------------------
+# time-mix
+# --------------------------------------------------------------------------
+def _ddlerp(x, x_prev, p):
+    """Data-dependent lerp producing the 5 mixed inputs (r, k, v, w, g)."""
+    xx = x_prev - x
+    base = x + xx * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(jnp.einsum("bsd,dk->bsk", base, p["lora_a"]))
+    lora = lora.reshape(*lora.shape[:-1], 5, _LORA)
+    adj = jnp.einsum("bsik,ikd->bsid", lora, p["lora_b"])
+    mix = p["mu"].astype(x.dtype)[None, None] + adj        # (B, S, 5, D)
+    return [x + xx * mix[:, :, i, :] for i in range(5)]
+
+
+def _decay(xw, p):
+    lora = jnp.tanh(jnp.einsum("bsd,dk->bsk", xw, p["w_lora_a"]))
+    ww = p["w_base"].astype(jnp.float32) + \
+        jnp.einsum("bsk,kd->bsd", lora, p["w_lora_b"]).astype(jnp.float32)
+    return jnp.exp(-jnp.exp(ww))  # (B, S, D) in (0, 1)
+
+
+def _wkv_scan(r, k, v, w, u, H, N, state0=None):
+    """Sequential wkv recurrence. r/k/v/w: (B, S, D); returns (B, S, D)."""
+    B, S, D = r.shape
+    rh = r.reshape(B, S, H, N).astype(jnp.float32)
+    kh = k.reshape(B, S, H, N).astype(jnp.float32)
+    vh = v.reshape(B, S, H, N).astype(jnp.float32)
+    wh = w.reshape(B, S, H, N)
+    uh = u.reshape(H, N).astype(jnp.float32)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(S_, inp):
+        rt, kt, vt, wt = inp  # (B, H, N) each
+        kv = kt[..., :, None] * vt[..., None, :]          # (B, H, N, N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S_ + uh[None, :, :, None] * kv)
+        S_new = wt[..., :, None] * S_ + kv
+        return S_new, y
+
+    xs = (jnp.moveaxis(rh, 1, 0), jnp.moveaxis(kh, 1, 0),
+          jnp.moveaxis(vh, 1, 0), jnp.moveaxis(wh, 1, 0))
+    state, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D)
+    return y, state
+
+
+def _wkv_chunked(r, k, v, w, u, H, N, chunk, state0=None):
+    """Chunk-parallel wkv (§Perf: the MXU-friendly form of the recurrence).
+
+    Exact algebra: with per-step decay products A_t = prod_{u<=t} w_u
+    (per channel), unrolling the recurrence inside a chunk of length c gives
+
+        y_t = (r_t * A_{t-1})^T S_0                         [inter]
+            + sum_{s<t} (sum_n r_t[n] k_s[n] e^{la_{t-1,n} - la_{s,n}}) v_s
+            + (r_t * u)^T k_t v_t                           [bonus diag]
+        S_c = diag(A_c) S_0 + sum_s diag(A_c / A_s) k_s v_s^T
+
+    The pairwise decay exponents la_{t-1} - la_s are <= 0 for s <= t-1, so
+    the (c, c, N) exp tensor is numerically stable (no 1/A blow-up), unlike
+    the factored r~ = r*A / k^ = k/A form. Chunks turn 4096 sequential
+    (B,H,N)x(B,H,N,M) outer-product steps into c^2-dense einsums.
+    """
+    B, S, D = r.shape
+    c = chunk
+    nc = S // c
+    sh = (B, nc, c, H, N)
+    rh = r.reshape(sh).astype(jnp.float32)
+    kh = k.reshape(sh).astype(jnp.float32)
+    vh = v.reshape(sh).astype(jnp.float32)
+    # 1e-30: smallest clamp safely in f32 NORMAL range (1e-38 is subnormal
+    # and flushed to zero on XLA CPU/TPU, which would put -inf into la)
+    la = jnp.cumsum(jnp.log(jnp.maximum(
+        w.reshape(sh).astype(jnp.float32), 1e-30)), axis=2)
+    uh = u.reshape(H, N).astype(jnp.float32)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    # intra-chunk pairwise decay scores (strictly lower triangular)
+    la_prev = jnp.concatenate([jnp.zeros_like(la[:, :, :1]), la[:, :, :-1]],
+                              axis=2)                       # la_{t-1}
+    pair = jnp.exp(jnp.clip(la_prev[:, :, :, None] - la[:, :, None, :, :],
+                            -80.0, 0.0))                    # (B,nc,t,s,H,N)
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    scores = jnp.einsum("bgthn,bgshn,bgtshn->bghts", rh, kh, pair)
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    diag = jnp.einsum("bgthn,hn,bgthn->bgth", rh, uh, kh)
+    y_intra = jnp.einsum("bghts,bgshm->bgthm", scores, vh) \
+        + diag[..., None] * vh
+
+    # inter-chunk: scan over chunk states
+    A_end = jnp.exp(la[:, :, -1])                           # (B,nc,H,N)
+    kd = kh * jnp.exp(la[:, :, -1:, :, :] - la)             # k_s * A_c/A_s
+
+    def chunk_step(S_, inp):
+        r_t, la_p, kd_g, v_g, a_end = inp
+        y_int = jnp.einsum("bthn,bhnm->bthm", r_t * jnp.exp(la_p), S_)
+        S_new = a_end[:, :, :, None] * S_ + jnp.einsum(
+            "bshn,bshm->bhnm", kd_g, v_g)
+        return S_new, y_int
+
+    xs = (jnp.moveaxis(rh, 1, 0), jnp.moveaxis(la_prev, 1, 0),
+          jnp.moveaxis(kd, 1, 0), jnp.moveaxis(vh, 1, 0),
+          jnp.moveaxis(A_end, 1, 0))
+    state, y_inter = jax.lax.scan(chunk_step, state0, xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 1)
+    return y.reshape(B, S, D), state
+
+
+def _time_mix(x, x_prev, p, cfg, state0=None):
+    H = cfg.d_model // cfg.rwkv_head_size
+    N = cfg.rwkv_head_size
+    xr, xk, xv, xw, xg = _ddlerp(x, x_prev, p)
+    r = jnp.einsum("bsd,dh->bsh", xr, p["wr"])
+    k = jnp.einsum("bsd,dh->bsh", xk, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", xv, p["wv"])
+    g = jax.nn.silu(jnp.einsum("bsd,dh->bsh", xg, p["wg"]).astype(jnp.float32))
+    w = _decay(xw, p)
+    S = r.shape[1]
+    chunk = getattr(cfg, "rwkv_chunk", 0)
+    if chunk and S > chunk and S % chunk == 0:
+        y, state = _wkv_chunked(r, k, v, w, p["u"], H, N, chunk, state0)
+    else:
+        y, state = _wkv_scan(r, k, v, w, p["u"], H, N, state0)
+    # per-head group norm
+    B, S, D = y.shape
+    yh = y.reshape(B, S, H, N)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, S, D) * p["gn"].astype(jnp.float32) \
+        + p["gn_b"].astype(jnp.float32)
+    out = jnp.einsum("bsh,hd->bsd", (y * g).astype(x.dtype), p["wo"])
+    return out, state
+
+
+def _channel_mix(x, x_prev, p):
+    xx = x_prev - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    k32 = jnp.maximum(k.astype(jnp.float32), 0.0)
+    kv = jnp.einsum("bsf,fd->bsd", (k32 * k32).astype(x.dtype), p["wv"])
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, p["wr"]).astype(jnp.float32))
+    return (r * kv.astype(jnp.float32)).astype(x.dtype)
+
+
+def _shift(x, last=None):
+    """Token shift: x_prev[t] = x[t-1]; first uses ``last`` (or zeros)."""
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+# --------------------------------------------------------------------------
+# forward / loss / serving
+# --------------------------------------------------------------------------
+def rwkv_forward(params, tokens, cfg, constrain=lambda t, n: t):
+    x = params["embed"].astype(cfg.dtype_act)[tokens]
+    x = layer_norm(x, 1.0 + params["ln0"], params["ln0_b"])
+    x = constrain(x, (("batch",), None, "embed"))
+
+    def body(h, lp):
+        hn = layer_norm(h, 1.0 + lp["ln1"], lp["ln1_b"])
+        out, _ = _time_mix(hn, _shift(hn), lp["tm"], cfg)
+        h = h + constrain(out, (("batch",), None, "embed"))
+        hn = layer_norm(h, 1.0 + lp["ln2"], lp["ln2_b"])
+        h = h + constrain(_channel_mix(hn, _shift(hn), lp["cm"]),
+                          (("batch",), None, "embed"))
+        return h, None
+
+    scan_body = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, _ = jax.lax.scan(scan_body, x, params["layers"])
+    return layer_norm(x, 1.0 + params["final_norm"], params["final_norm_b"])
+
+
+def rwkv_loss(params, batch, cfg, constrain=lambda t, n: t):
+    x = rwkv_forward(params, batch["tokens"], cfg, constrain)
+    return chunked_ce_loss(x, params["head"].T.astype(cfg.dtype_act),
+                           batch["labels"], chunk=cfg.loss_chunk)
+
+
+def init_rwkv_cache(cfg, batch, dtype):
+    H = cfg.d_model // cfg.rwkv_head_size
+    N = cfg.rwkv_head_size
+    L, D = cfg.num_layers, cfg.d_model
+    return RWKVCache(
+        state=jnp.zeros((L, batch, H, N, N), jnp.float32),
+        x_tm=jnp.zeros((L, batch, D), dtype),
+        x_cm=jnp.zeros((L, batch, D), dtype),
+        length=jnp.int32(0),
+    )
+
+
+def rwkv_decode_step(params, cache: RWKVCache, tokens, cfg,
+                     constrain=lambda t, n: t):
+    x = params["embed"].astype(cfg.dtype_act)[tokens]  # (B, 1, D)
+    x = layer_norm(x, 1.0 + params["ln0"], params["ln0_b"])
+
+    def body(h, inp):
+        lp, st, xtm, xcm = inp
+        hn = layer_norm(h, 1.0 + lp["ln1"], lp["ln1_b"])
+        out, st_new = _time_mix(hn, xtm[:, None, :], lp["tm"], cfg, state0=st)
+        xtm_new = hn[:, -1, :]
+        h = h + out
+        hn = layer_norm(h, 1.0 + lp["ln2"], lp["ln2_b"])
+        h = h + _channel_mix(hn, xcm[:, None, :], lp["cm"])
+        xcm_new = hn[:, -1, :]
+        return h, (st_new, xtm_new, xcm_new)
+
+    x, (states, xtms, xcms) = jax.lax.scan(
+        body, x, (params["layers"], cache.state, cache.x_tm, cache.x_cm))
+    x = layer_norm(x, 1.0 + params["final_norm"], params["final_norm_b"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))
+    new_cache = RWKVCache(state=states, x_tm=xtms, x_cm=xcms,
+                          length=cache.length + 1)
+    return logits[:, 0], new_cache
+
+
+def rwkv_prefill(params, batch, cfg, constrain=lambda t, n: t):
+    """Prompt pass returning (last logits, cache with final states)."""
+    tokens = batch["tokens"]
+    x = params["embed"].astype(cfg.dtype_act)[tokens]
+    x = layer_norm(x, 1.0 + params["ln0"], params["ln0_b"])
+
+    def body(h, lp):
+        hn = layer_norm(h, 1.0 + lp["ln1"], lp["ln1_b"])
+        out, st = _time_mix(hn, _shift(hn), lp["tm"], cfg)
+        xtm = hn[:, -1, :]
+        h = h + out
+        hn = layer_norm(h, 1.0 + lp["ln2"], lp["ln2_b"])
+        h = h + _channel_mix(hn, _shift(hn), lp["cm"])
+        xcm = hn[:, -1, :]
+        return h, (st, xtm, xcm)
+
+    scan_body = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    x, (states, xtms, xcms) = jax.lax.scan(scan_body, x, params["layers"])
+    x = layer_norm(x, 1.0 + params["final_norm"], params["final_norm_b"])
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], params["head"].astype(x.dtype))
+    cache = RWKVCache(state=states, x_tm=xtms, x_cm=xcms,
+                      length=jnp.int32(tokens.shape[1]))
+    return logits, cache

@@ -1,0 +1,345 @@
+"""Decoder-only transformer LM (dense / MoE / VLM-prefix), scan-over-layers.
+
+One implementation covers stablelm-12b, nemotron-4-15b, phi3-medium-14b,
+qwen2-72b, llava-next-mistral-7b (patch-embedding prefix), arctic-480b and
+qwen3-moe-235b (MoE FFN, optional parallel dense residual, optional QK-norm).
+
+Parameters are stored stacked over layers (leading L dim) and the stack is
+traversed with jax.lax.scan (O(1) HLO size in depth — required to keep the
+94-layer MoE dry-run compile tractable), with optional per-layer remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import get_active_mesh
+from .layers import (Cache, apply_rope, attention, chunked_ce_loss,
+                     decode_attention, mlp, mlp_params, rms_norm, rope)
+from .moe import moe_ffn, moe_ffn_sharded, moe_param_table
+
+__all__ = ["decoder_param_table", "build_params", "table_logical",
+           "decoder_forward", "decoder_loss", "decoder_prefill",
+           "decoder_decode_step", "init_decoder_cache"]
+
+
+# --------------------------------------------------------------------------
+# parameter tables:  path -> (shape, logical_axes, fan_in or None)
+# --------------------------------------------------------------------------
+def _attn_table(cfg):
+    D, Hq, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    t = {
+        "ln1": ((D,), ("embed",), None),
+        "wq": ((D, Hq * Dh), ("embed", "heads_fused"), D),
+        "wk": ((D, Hkv * Dh), ("embed", "kv_fused"), D),
+        "wv": ((D, Hkv * Dh), ("embed", "kv_fused"), D),
+        "wo": ((Hq * Dh, D), ("heads_fused", "embed"), Hq * Dh),
+    }
+    if cfg.qkv_bias:
+        t["bq"] = ((Hq * Dh,), ("heads_fused",), None)
+        t["bk"] = ((Hkv * Dh,), ("kv_fused",), None)
+        t["bv"] = ((Hkv * Dh,), ("kv_fused",), None)
+    if cfg.qk_norm:
+        t["q_norm"] = ((Dh,), (None,), None)
+        t["k_norm"] = ((Dh,), (None,), None)
+    return t
+
+
+def decoder_layer_table(cfg):
+    t = dict(_attn_table(cfg))
+    t["ln2"] = ((cfg.d_model,), ("embed",), None)
+    if cfg.moe:
+        for k, v in moe_param_table(cfg).items():
+            t[f"moe/{k}"] = v
+        if cfg.moe_dense_residual:
+            for k, v in mlp_params(cfg.mlp_act, cfg.d_model, cfg.d_ff).items():
+                t[f"residual_mlp/{k}"] = v
+    else:
+        for k, v in mlp_params(cfg.mlp_act, cfg.d_model, cfg.d_ff,
+                               bias=cfg.mlp_bias).items():
+            t[f"mlp/{k}"] = v
+    return t
+
+
+def decoder_param_table(cfg):
+    table = {
+        "embed": ((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), None),
+        "final_norm": ((cfg.d_model,), ("embed",), None),
+    }
+    for k, v in decoder_layer_table(cfg).items():
+        shape, logical, fan = v
+        table[f"layers/{k}"] = ((cfg.num_layers, *shape),
+                                ("layers", *logical), fan)
+    return table
+
+
+def build_params(key, table, dtype):
+    """Materialise a parameter pytree from a table (fan-in scaled init)."""
+    names = sorted(table)
+    keys = jax.random.split(key, len(names))
+    params: dict[str, Any] = {}
+    for name, k in zip(names, keys):
+        shape, _, fan = table[name]
+        if name.endswith(("ln1", "ln2", "final_norm", "q_norm", "k_norm")) \
+                or "/b" in name or name.startswith("b"):
+            arr = jnp.zeros(shape, dtype)
+        elif fan is None:
+            arr = (0.02 * jax.random.normal(k, shape, jnp.float32)).astype(dtype)
+        else:
+            std = fan ** -0.5
+            arr = (std * jax.random.normal(k, shape, jnp.float32)).astype(dtype)
+        _assign(params, name, arr)
+    return params
+
+
+def table_logical(table):
+    out: dict[str, Any] = {}
+    for name, (_, logical, _) in table.items():
+        _assign(out, name, logical)
+    return out
+
+
+def _assign(tree, path, value):
+    parts = path.split("/")
+    for p in parts[:-1]:
+        tree = tree.setdefault(p, {})
+    tree[parts[-1]] = value
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+def _project_qkv(x, p, cfg):
+    B, S, _ = x.shape
+    Hq, Hkv, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, S, Hq, Dh)
+    k = k.reshape(B, S, Hkv, Dh)
+    v = v.reshape(B, S, Hkv, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _ffn(x, p, cfg, constrain):
+    if cfg.moe:
+        from .moe import moe_ffn_sharded_decode
+
+        mesh = get_active_mesh()
+        if (mesh is not None and mesh.shape.get("model", 1) > 1
+                and cfg.num_experts % mesh.shape["model"] == 0):
+            if x.shape[0] * x.shape[1] <= 4096:
+                # decode-sized batches: resident weights, gathered tokens
+                out = moe_ffn_sharded_decode(x, p["moe"], cfg, mesh)
+            else:
+                # expert-parallel shard_map path (§Perf hillclimb 1)
+                out = moe_ffn_sharded(x, p["moe"], cfg, mesh)
+        else:
+            out = moe_ffn(x, p["moe"], cfg, cfg.num_moe_groups, constrain)
+        if cfg.moe_dense_residual:
+            out = out + mlp(x, p["residual_mlp"], cfg.mlp_act)
+        return out
+    return mlp(x, p["mlp"], cfg.mlp_act)
+
+
+def _attn_out(a, p):
+    B, S = a.shape[:2]
+    return jnp.einsum("bsh,hd->bsd", a.reshape(B, S, -1), p["wo"])
+
+
+def _decoder_layer(x, p, cfg, cos, sin, constrain, layer_window):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(h, p, cfg)
+    if cfg.use_rope:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = constrain(q, (("batch",), None, "heads", None))
+    a = attention(q, k, v, causal=True, window=layer_window,
+                  q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    x = x + constrain(_attn_out(a, p), (("batch",), "seq", "embed"))
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + constrain(_ffn(h, p, cfg, constrain),
+                      (("batch",), "seq", "embed"))
+    return x
+
+
+# --------------------------------------------------------------------------
+# forward / loss / serve
+# --------------------------------------------------------------------------
+def decoder_forward(params, tokens, cfg, *, prefix_embeds=None,
+                    constrain=lambda t, names: t):
+    """tokens: (B, S_text) int32; prefix_embeds: (B, P, D) or None.
+
+    Returns final hidden states (B, P + S_text, D).
+    """
+    x = params["embed"].astype(cfg.dtype_act)[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = x * (cfg.d_model ** 0.5 if cfg.scale_embed else 1.0)
+    x = constrain(x, (("batch",), "seq", "embed"))
+    S = x.shape[1]
+    cos, sin = rope(jnp.arange(S), cfg.head_dim, cfg.rope_theta, jnp.float32)
+
+    windows = cfg.layer_windows  # tuple of len pattern or None
+    def body(carry, lp):
+        h, li = carry
+        if windows is None:
+            w = cfg.window
+            h = _decoder_layer(h, lp, cfg, cos, sin, constrain, w)
+        else:
+            # static alternation pattern folded into scan via switch
+            idx = li % len(windows)
+            branches = [functools.partial(
+                _decoder_layer, cfg=cfg, cos=cos, sin=sin,
+                constrain=constrain, layer_window=w) for w in windows]
+            h = jax.lax.switch(idx, branches, h, lp)
+        return (h, li + 1), None
+
+    scan_body = body
+    if cfg.remat:
+        scan_body = jax.checkpoint(body, prevent_cse=False)
+    (x, _), _ = jax.lax.scan(scan_body, (x, jnp.int32(0)), params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def decoder_loss(params, batch, cfg, constrain=lambda t, names: t):
+    x = decoder_forward(params, batch["tokens"], cfg,
+                        prefix_embeds=batch.get("prefix_embeds"),
+                        constrain=constrain)
+    P = 0 if batch.get("prefix_embeds") is None else batch["prefix_embeds"].shape[1]
+    x_text = x[:, P:, :]
+    return chunked_ce_loss(x_text, params["embed"].astype(cfg.dtype_act),
+                           batch["labels"], chunk=cfg.loss_chunk,
+                           logit_cap=cfg.final_logit_cap)
+
+
+def init_decoder_cache(cfg, batch, max_len, dtype):
+    L, Hkv, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    return Cache(
+        k=jnp.zeros((L, batch, max_len, Hkv, Dh), dtype),
+        v=jnp.zeros((L, batch, max_len, Hkv, Dh), dtype),
+        length=jnp.int32(0),
+    )
+
+
+def _decode_layer(x, lp, cache_k, cache_v, length, cfg, cos, sin, constrain,
+                  layer_window):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = _project_qkv(h, lp, cfg)
+    if cfg.use_rope:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    z = jnp.zeros((), length.dtype) if hasattr(length, "dtype") \
+        else jnp.int32(0)
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                      (z, length, z, z))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                      (z, length, z, z))
+    a = decode_attention(q, ck, cv, length + 1, window=layer_window)
+    x = x + _attn_out(a, lp)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + _ffn(h, lp, cfg, constrain)
+    return x, ck, cv
+
+
+def decoder_decode_step(params, cache: Cache, tokens, cfg,
+                        constrain=lambda t, names: t):
+    """One greedy decode step. tokens: (B, 1) -> (logits (B, V), new cache)."""
+    x = params["embed"].astype(cfg.dtype_act)[tokens]
+    x = x * (cfg.d_model ** 0.5 if cfg.scale_embed else 1.0)
+    pos = cache.length
+    cos, sin = rope(jnp.arange(1) + pos, cfg.head_dim, cfg.rope_theta)
+    windows = cfg.layer_windows
+
+    def body(carry, inp):
+        h, li = carry
+        lp, ck, cv = inp
+        if windows is None:
+            h, ck, cv = _decode_layer(h, lp, ck, cv, pos, cfg, cos, sin,
+                                      constrain, cfg.window)
+        else:
+            idx = li % len(windows)
+            branches = [functools.partial(
+                _decode_layer, cfg=cfg, cos=cos, sin=sin, constrain=constrain,
+                layer_window=w) for w in windows]
+            h, ck, cv = jax.lax.switch(idx, branches, h, lp, ck, cv, pos)
+        return (h, li + 1), (ck, cv)
+
+    (x, _), (new_k, new_v) = jax.lax.scan(
+        body, (x, jnp.int32(0)), (params["layers"], cache.k, cache.v))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    logits = constrain(logits, (("batch",), None, "vocab"))
+    if cfg.final_logit_cap is not None:
+        logits = cfg.final_logit_cap * jnp.tanh(logits / cfg.final_logit_cap)
+    return logits[:, 0], Cache(k=new_k, v=new_v, length=cache.length + 1)
+
+
+def decoder_prefill(params, batch, cfg, max_len,
+                    constrain=lambda t, names: t):
+    """Process a full prompt, return (last-token logits, populated cache).
+
+    One scan over layers produces both the final hidden state and the K/V
+    pairs that seed the decode cache.
+    """
+    tokens = batch["tokens"]
+    x0 = params["embed"].astype(cfg.dtype_act)[tokens]
+    if batch.get("prefix_embeds") is not None:
+        x0 = jnp.concatenate([batch["prefix_embeds"].astype(x0.dtype), x0], 1)
+    x0 = x0 * (cfg.d_model ** 0.5 if cfg.scale_embed else 1.0)
+    x0 = constrain(x0, (("batch",), "seq", "embed"))
+    B, S = x0.shape[:2]
+    cos, sin = rope(jnp.arange(S), cfg.head_dim, cfg.rope_theta)
+    windows = cfg.layer_windows
+
+    def layer_with_kv(h, lp, w):
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = _project_qkv(hn, lp, cfg)
+        if cfg.use_rope:
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+        a = attention(q, k, v, causal=True, window=w,
+                      q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        h = h + constrain(_attn_out(a, lp), (("batch",), "seq", "embed"))
+        hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + constrain(_ffn(hn, lp, cfg, constrain),
+                          (("batch",), "seq", "embed"))
+        return h, k, v
+
+    def body(carry, lp):
+        h, li = carry
+        if windows is None:
+            h, k, v = layer_with_kv(h, lp, cfg.window)
+        else:
+            branches = [functools.partial(layer_with_kv, w=w) for w in windows]
+            h, k, v = jax.lax.switch(li % len(windows), branches, h, lp)
+        return (h, li + 1), (k, v)
+
+    scan_body = jax.checkpoint(body, prevent_cse=False) if cfg.remat else body
+    (x, _), (ks, vs) = jax.lax.scan(scan_body, (x0, jnp.int32(0)),
+                                    params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", x[:, -1, :],
+                        params["embed"].astype(x.dtype))
+    if cfg.final_logit_cap is not None:
+        logits = cfg.final_logit_cap * jnp.tanh(logits / cfg.final_logit_cap)
+
+    cache = init_decoder_cache(cfg, B, max_len, cfg.dtype_act)
+    cache = Cache(
+        k=jax.lax.dynamic_update_slice(
+            cache.k, ks.astype(cache.k.dtype), (0, 0, 0, 0, 0)),
+        v=jax.lax.dynamic_update_slice(
+            cache.v, vs.astype(cache.v.dtype), (0, 0, 0, 0, 0)),
+        length=jnp.int32(S),
+    )
+    return logits, cache

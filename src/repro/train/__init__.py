@@ -1,0 +1,3 @@
+"""Optimizers and distributed train/serve step builders."""
+from .optimizers import OptConfig, apply_update, cosine_lr, init_opt_state
+from .trainer import TrainSetup, TrainState, make_serve_steps, make_train_step

@@ -1,0 +1,152 @@
+"""Optimizers in pure JAX (no optax offline): AdamW and Adafactor.
+
+State lives in pytrees mirroring the parameters, so it inherits parameter
+shardings (ZeRO: with FSDP rules the moments are fully sharded). Moments
+dtype is configurable — the 400B-class MoE configs use bf16 moments to fit
+the v5e HBM budget (documented in EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "cosine_lr", "init_opt_state", "apply_update",
+           "global_norm", "clip_by_global_norm"]
+
+
+class OptConfig(NamedTuple):
+    name: str = "adamw"            # adamw | adafactor
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moments_dtype: Any = jnp.float32
+    # adafactor
+    factored_min_dim: int = 128
+
+
+def cosine_lr(cfg: OptConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(math.pi * prog))
+    decayed = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps, warm, decayed)
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def _is_factored(shape, cfg):
+    return len(shape) >= 2 and shape[-1] >= cfg.factored_min_dim \
+        and shape[-2] >= cfg.factored_min_dim
+
+
+def init_opt_state(params, cfg: OptConfig):
+    if cfg.name == "adamw":
+        zeros = lambda p: jnp.zeros(p.shape, cfg.moments_dtype)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params)}
+    if cfg.name == "adafactor":
+        def vrow(p):
+            if _is_factored(p.shape, cfg):
+                return jnp.zeros(p.shape[:-1], cfg.moments_dtype)
+            return jnp.zeros(p.shape, cfg.moments_dtype)
+
+        def vcol(p):
+            if _is_factored(p.shape, cfg):
+                return jnp.zeros((*p.shape[:-2], p.shape[-1]),
+                                 cfg.moments_dtype)
+            return jnp.zeros((0,), cfg.moments_dtype)
+
+        return {"vr": jax.tree_util.tree_map(vrow, params),
+                "vc": jax.tree_util.tree_map(vcol, params)}
+    raise ValueError(cfg.name)
+
+
+def _adamw_leaf(p, g, m, v, lr, step, cfg: OptConfig):
+    g32 = g.astype(jnp.float32)
+    m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+    v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+    mhat = m32 / (1 - cfg.b1 ** step)
+    vhat = v32 / (1 - cfg.b2 ** step)
+    upd = mhat / (jnp.sqrt(vhat) + cfg.eps)
+    if p.ndim >= 2:  # no weight decay on norms/biases
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+    newp = p.astype(jnp.float32) - lr * upd
+    return newp.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+
+def _adafactor_leaf(p, g, vr, vc, lr, step, cfg: OptConfig):
+    g32 = g.astype(jnp.float32)
+    decay = 1.0 - (step ** -0.8)
+    if _is_factored(p.shape, cfg):
+        r = decay * vr.astype(jnp.float32) + (1 - decay) * jnp.mean(
+            g32 * g32, axis=-1)
+        c = decay * vc.astype(jnp.float32) + (1 - decay) * jnp.mean(
+            g32 * g32, axis=-2)
+        rc = r[..., None] * c[..., None, :]
+        denom = jnp.sqrt(rc / jnp.maximum(
+            jnp.mean(r, axis=-1)[..., None, None], 1e-30)) + cfg.eps
+        upd = g32 / denom
+        new_vr, new_vc = r.astype(vr.dtype), c.astype(vc.dtype)
+    else:
+        v = decay * vr.astype(jnp.float32) + (1 - decay) * g32 * g32
+        upd = g32 / (jnp.sqrt(v) + cfg.eps)
+        new_vr, new_vc = v.astype(vr.dtype), vc
+    # update clipping (Adafactor RMS-1 rule)
+    rms = jnp.sqrt(jnp.mean(upd * upd) + 1e-30)
+    upd = upd / jnp.maximum(1.0, rms)
+    if p.ndim >= 2:
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+    newp = p.astype(jnp.float32) - lr * upd
+    return newp.astype(p.dtype), new_vr, new_vc
+
+
+def apply_update(params, grads, opt_state, step, cfg: OptConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    lr = cosine_lr(cfg, step)
+    stepf = step.astype(jnp.float32) + 1.0
+    if cfg.name == "adamw":
+        out = jax.tree_util.tree_map(
+            lambda p, g, m, v: _adamw_leaf(p, g, m, v, lr, stepf, cfg),
+            params, grads, opt_state["m"], opt_state["v"])
+        newp = jax.tree_util.tree_map(lambda t: t[0], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        newm = jax.tree_util.tree_map(lambda t: t[1], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        newv = jax.tree_util.tree_map(lambda t: t[2], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return newp, {"m": newm, "v": newv}, {"lr": lr, "grad_norm": gnorm}
+    if cfg.name == "adafactor":
+        out = jax.tree_util.tree_map(
+            lambda p, g, vr, vc: _adafactor_leaf(p, g, vr, vc, lr, stepf, cfg),
+            params, grads, opt_state["vr"], opt_state["vc"])
+        newp = jax.tree_util.tree_map(lambda t: t[0], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        newvr = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        newvc = jax.tree_util.tree_map(lambda t: t[2], out,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return newp, {"vr": newvr, "vc": newvc}, {"lr": lr, "grad_norm": gnorm}
+    raise ValueError(cfg.name)

@@ -1,0 +1,220 @@
+"""Distributed train/serve step builders (pjit + logical sharding rules).
+
+``make_train_step`` returns a jit-compiled step plus the sharding pytrees the
+launcher / dry-run needs: state shardings (params, optimizer moments, step)
+and per-input batch shardings. Features:
+
+  * microbatched gradient accumulation (scan) — also the compute/comm overlap
+    mechanism: XLA overlaps the reduce of microbatch i with compute of i+1;
+  * remat at layer granularity (inside the models);
+  * optional int8 gradient compression across the 'pod' axis (shard_map);
+  * donated state for in-place updates.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..distributed.sharding import (ACT_RULES, batch_shardings,
+                                    logical_to_pspec, make_constrain,
+                                    param_shardings, rules_for,
+                                    set_active_mesh)
+from .optimizers import OptConfig, apply_update, init_opt_state
+
+__all__ = ["TrainState", "make_train_step", "make_serve_steps", "TrainSetup"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+class TrainSetup(NamedTuple):
+    step_fn: Any                 # jitted (state, batch) -> (state, metrics)
+    state_shardings: Any
+    batch_shardings: Any
+    init_state: Any              # (key) -> TrainState (abstract-safe)
+    lowered: Any = None
+
+
+def _state_logical(model, opt_cfg: OptConfig):
+    logical = model.logical
+    if opt_cfg.name == "adamw":
+        opt_logical = {"m": logical, "v": logical}
+    else:
+        # factored moments: row moment drops the last axis, col the 2nd-last
+        def row(l):
+            return l[:-1] if isinstance(l, tuple) else l
+
+        def col(l):
+            return (*l[:-2], l[-1]) if isinstance(l, tuple) and len(l) >= 2 else l
+
+        tmap = functools.partial(
+            jax.tree_util.tree_map,
+            is_leaf=lambda x: isinstance(x, tuple) and all(
+                isinstance(e, (str, tuple, type(None))) for e in x))
+        opt_logical = {"vr": tmap(row, logical), "vc": tmap(col, logical)}
+    return logical, opt_logical
+
+
+def make_train_step(model, mesh, opt_cfg: OptConfig | None = None,
+                    grad_accum: int = 1, rules=None, act_rules=None,
+                    donate: bool = True):
+    """Build the jitted SPMD train step for a model on a mesh."""
+    cfg = model.cfg
+    opt_cfg = opt_cfg or OptConfig()
+    rules = rules if rules is not None else rules_for(cfg)
+    constrain = make_constrain(mesh, act_rules)
+    set_active_mesh(mesh)  # enables shard_map layer paths (MoE EP)
+
+    # ---- shardings --------------------------------------------------------
+    def _abstract_params():
+        return jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
+
+    p_shapes = _abstract_params()
+    p_sh = param_shardings(model.logical, mesh, rules, p_shapes)
+    logical, opt_logical = _state_logical(model, opt_cfg)
+    o_shapes = jax.eval_shape(
+        lambda: init_opt_state(p_shapes, opt_cfg))
+    o_sh = jax.tree_util.tree_map(
+        lambda l, s: NamedSharding(mesh, logical_to_pspec(l, rules, mesh,
+                                                          s.shape)),
+        opt_logical, o_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, tuple, type(None))) for e in x))
+    state_sh = TrainState(params=p_sh, opt_state=o_sh,
+                          step=NamedSharding(mesh, P()))
+
+    # ---- step function ----------------------------------------------------
+    def loss_fn(params, batch):
+        return model.loss(params, batch, constrain=constrain)
+
+    def train_step(state: TrainState, batch):
+        if grad_accum > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(state.params, mb)
+                gsum = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            gzero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            # (B, ...) -> (accum, B/accum, ...) with microbatch rows STRIDED
+            # across the batch so each microbatch stays evenly sharded over
+            # the data axes (a plain leading reshape would concentrate each
+            # microbatch on 1/accum of the data shards).
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(x.shape[0] // grad_accum, grad_accum,
+                                    *x.shape[1:]).swapaxes(0, 1), batch)
+            (grads, loss), _ = jax.lax.scan(micro, (gzero, 0.0), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        new_params, new_opt, metrics = apply_update(
+            state.params, grads, state.opt_state, state.step, opt_cfg)
+        metrics["loss"] = loss
+        new_state = TrainState(params=new_params, opt_state=new_opt,
+                               step=state.step + 1)
+        return new_state, metrics
+
+    def init_state(key):
+        params = model.init(key)
+        return TrainState(params=params,
+                          opt_state=init_opt_state(params, opt_cfg),
+                          step=jnp.zeros((), jnp.int32))
+
+    step_fn = jax.jit(
+        train_step,
+        in_shardings=(state_sh, None),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,) if donate else (),
+    )
+    return TrainSetup(step_fn=step_fn, state_shardings=state_sh,
+                      batch_shardings=None, init_state=init_state)
+
+
+def make_serve_steps(model, mesh, rules=None, max_len: int = 2048):
+    """Jitted prefill and decode steps with sharded params and KV caches.
+
+    Serving defaults to SERVE_RULES: weights resident (no per-token FSDP
+    gathers), MoE/MLP inner dims spread over both axes so the 480B-class
+    experts fit HBM without optimizer state (§Perf hillclimb 2).
+    """
+    from ..distributed.sharding import SERVE_RULES
+
+    cfg = model.cfg
+    rules = rules if rules is not None else SERVE_RULES
+    constrain = make_constrain(mesh)
+    set_active_mesh(mesh)
+
+    p_shapes = jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
+    p_sh = param_shardings(model.logical, mesh, rules, p_shapes)
+
+    def cache_shardings(batch, prefer: str = "time"):
+        """prefer="time": T-axis over 'model' (decode steady state — softmax
+        stats psums instead of score partials). prefer="width": natural
+        prefill output layout (heads/width over 'model'); the handoff
+        reshards once, amortised over the whole decode."""
+        shapes = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+        dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+        def one(sds):
+            # cache leaves: (L, B, ...) -> batch over dp; scalars replicated
+            if sds.ndim < 2:
+                return NamedSharding(mesh, P())
+            prod = 1
+            kept = []
+            for a in dp:
+                if sds.shape[1] % (prod * mesh.shape[a]) == 0:
+                    kept.append(a)
+                    prod *= mesh.shape[a]
+            # Shard the model dimension of the cache over 'model': prefer the
+            # kv-heads axis of (L, B, T, H, Dh); fall back to head_dim (GQA
+            # archs where kv_heads < model-axis size), then to any trailing
+            # divisible dim (rnn width, wkv heads, ...). Without this a 32k
+            # KV cache replicates 16x over the model axis (~50 GiB/device).
+            tp = mesh.shape.get("model", 1)
+            rest = [None] * (sds.ndim - 2)
+            if not jnp.issubdtype(sds.dtype, jnp.integer):
+                # Preference (§Perf hillclimb 2, iter 3): shard the TIME axis
+                # of (L,B,T,H,Dh) caches over 'model' — decode attention then
+                # psums tiny softmax stats instead of (B,H,1,T) partials or
+                # replicating the cache; fall back kv-heads, then head_dim.
+                order = []
+                if sds.ndim >= 5:
+                    if prefer == "time":
+                        order.append(0)               # T axis
+                    order.append(sds.ndim - 4)        # kv-heads axis
+                order.append(sds.ndim - 3)            # head_dim / width axis
+                order += [i for i in range(sds.ndim - 2)
+                          if i not in order and i != 0]
+                for i in order:
+                    if 0 <= i < sds.ndim - 2 and sds.shape[i + 2] % tp == 0 \
+                            and sds.shape[i + 2] >= tp:
+                        rest[i] = "model"
+                        break
+            return NamedSharding(
+                mesh, P(None, tuple(kept) if kept else None, *rest))
+
+        return jax.tree_util.tree_map(one, shapes)
+
+    def prefill(params, batch):
+        return model.prefill(params, batch, max_len, constrain=constrain)
+
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens, constrain=constrain)
+
+    return {
+        "param_shardings": p_sh,
+        "cache_shardings": cache_shardings,
+        "prefill": prefill,
+        "decode_step": decode_step,
+        "constrain": constrain,
+    }

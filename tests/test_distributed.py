@@ -1,0 +1,208 @@
+"""Distributed substrate tests on a multi-device host mesh (subprocess).
+
+The XLA host-device-count flag must be set before jax initialises, and the
+main pytest process must keep seeing 1 device (per the assignment), so every
+test here runs its payload in a fresh subprocess with the flag set.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_payload(code: str, devices: int = 8, timeout: int = 520):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-4000:]}"
+    return r.stdout
+
+
+def test_distributed_lkgp_mvm_matches_single_device():
+    out = run_payload("""
+        import jax, jax.numpy as jnp, numpy as np
+        jax.config.update("jax_enable_x64", True)
+        from repro.core import gram_matrices, init_params, lk_operator, cg_solve
+        from repro.distributed.lkgp_dist import dist_lk_operator, dist_cg_solve
+        from repro.launch.mesh import make_debug_mesh
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        mesh = make_debug_mesh(data=4, model=2)
+        n, m, d = 32, 12, 5
+        key = jax.random.PRNGKey(0)
+        X = jax.random.uniform(key, (n, d), jnp.float64)
+        t = jnp.linspace(0, 1, m, dtype=jnp.float64)
+        params = init_params(d, jnp.float64)
+        K1, K2 = gram_matrices(params, X, t)
+        lens = jax.random.randint(jax.random.PRNGKey(1), (n,), 1, m + 1)
+        mask = (jnp.arange(m)[None] < lens[:, None]).astype(jnp.float64)
+        Y = jax.random.normal(jax.random.PRNGKey(2), (n, m), jnp.float64) * mask
+
+        noise = 0.05
+        with mesh:
+            sh = NamedSharding(mesh, P("data", None))
+            K1s = jax.device_put(K1, sh)
+            Ys = jax.device_put(Y, sh)
+            ms = jax.device_put(mask, sh)
+            A = dist_lk_operator(mesh, K1s, K2, ms, noise)
+            out = jax.jit(A)(Ys)
+            x_dist, iters, rel = jax.jit(
+                lambda b: dist_cg_solve(A, b, tol=1e-8, max_iters=500))(Ys)
+
+        A_ref = lk_operator(K1, K2, mask, noise)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(A_ref(Y)),
+                                   rtol=1e-9, atol=1e-9)
+        x_ref = cg_solve(A_ref, Y, tol=1e-8, max_iters=500).x
+        np.testing.assert_allclose(np.asarray(x_dist), np.asarray(x_ref),
+                                   rtol=1e-5, atol=1e-7)
+        print("DIST-LKGP-OK", int(iters))
+    """)
+    assert "DIST-LKGP-OK" in out
+
+
+def test_gradient_compression_error_feedback():
+    out = run_payload("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_debug_mesh
+        from repro.train.compression import make_compressed_allreduce
+
+        mesh = make_debug_mesh(data=2, model=2, pod=2)
+        tree = {"a": jnp.linspace(-1, 1, 64).reshape(8, 8),
+                "b": jnp.array([1e-3, 5.0, -2.0])}
+        err0 = jax.tree_util.tree_map(lambda a: jnp.zeros_like(a), tree)
+        ar = make_compressed_allreduce(mesh)
+        with mesh:
+            g1, e1 = jax.jit(ar)(tree, err0)
+        # identical inputs on both pods -> mean == input (to int8 precision)
+        for k in tree:
+            np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(tree[k]),
+                                       atol=float(jnp.max(jnp.abs(tree[k]))) / 100)
+        # error feedback: residual carried, bounded by one quantisation step
+        for k in tree:
+            scale = float(jnp.max(jnp.abs(tree[k]))) / 127
+            assert float(jnp.max(jnp.abs(e1[k]))) <= scale + 1e-6
+        # over many steps the averaged estimate converges to the true mean
+        acc = jax.tree_util.tree_map(lambda a: jnp.zeros_like(a), tree)
+        err = err0
+        steps = 20
+        with mesh:
+            for _ in range(steps):
+                g, err = jax.jit(ar)(tree, err)
+                acc = jax.tree_util.tree_map(lambda s, x: s + x, acc, g)
+        for k in tree:
+            np.testing.assert_allclose(np.asarray(acc[k]) / steps,
+                                       np.asarray(tree[k]),
+                                       atol=2e-3 * max(1.0, float(jnp.max(jnp.abs(tree[k])))))
+        print("COMPRESS-OK")
+    """)
+    assert "COMPRESS-OK" in out
+
+
+def test_pipeline_parallel_matches_sequential():
+    out = run_payload("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.launch.mesh import make_debug_mesh
+        from repro.train.pipeline import pipelined_forward
+
+        mesh = make_debug_mesh(data=2, model=2, pod=2)  # 2 pipeline stages
+        S, L_per, D = 2, 3, 16
+        key = jax.random.PRNGKey(0)
+        Ws = jax.random.normal(key, (S, L_per, D, D), jnp.float32) * 0.1
+
+        def stage_fn(sp, x):  # sp["w"]: (L_per, D, D)
+            def body(h, w):
+                return jnp.tanh(h @ w), None
+            h, _ = jax.lax.scan(body, x, sp["w"])
+            return h
+
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, D), jnp.float32)
+        pipe = pipelined_forward(mesh, stage_fn, num_microbatches=4)
+        with mesh:
+            y_pipe = jax.jit(pipe)({"w": Ws}, x) if False else pipe({"w": Ws}, x)
+
+        # sequential reference
+        h = x
+        for s in range(S):
+            h = stage_fn({"w": Ws[s]}, h)
+        np.testing.assert_allclose(np.asarray(y_pipe), np.asarray(h),
+                                   rtol=1e-5, atol=1e-5)
+        print("PIPE-OK")
+    """)
+    assert "PIPE-OK" in out
+
+
+def test_checkpoint_restart_and_elastic_restore():
+    out = run_payload("""
+        import os, subprocess, sys, tempfile, numpy as np
+        d = tempfile.mkdtemp()
+        base = [sys.executable, "-m", "repro.launch.train", "--arch",
+                "stablelm_12b", "--smoke", "--steps", "8", "--batch", "4",
+                "--seq", "16", "--ckpt-dir", d, "--ckpt-every", "2",
+                "--log-every", "100"]
+        env = dict(os.environ)
+        # run 1: preempted at step 4
+        r = subprocess.run(base + ["--simulate-preempt", "4"],
+                           capture_output=True, text=True, env=env)
+        assert r.returncode == 42, r.stderr[-2000:]
+        assert "SIMULATED PREEMPTION" in r.stdout
+        # run 2: resumes from step 4 on a DIFFERENT device count (elastic)
+        env2 = dict(env)
+        env2["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        r2 = subprocess.run(base, capture_output=True, text=True, env=env2)
+        assert r2.returncode == 0, r2.stderr[-2000:]
+        assert "restored checkpoint at step 4" in r2.stdout, r2.stdout
+        assert "final loss" in r2.stdout
+        print("CKPT-OK")
+    """, devices=8)
+    assert "CKPT-OK" in out
+
+
+def test_train_loss_decreases_on_mesh():
+    out = run_payload("""
+        import jax, numpy as np
+        from repro.launch.train import main
+        losses = main(["--arch", "rwkv6_1b6", "--smoke", "--steps", "30",
+                       "--batch", "8", "--seq", "32", "--lr", "5e-3",
+                       "--log-every", "10"])
+        assert losses[-1] < losses[0] - 0.2, (losses[0], losses[-1])
+        print("TRAIN-DECREASE-OK")
+    """)
+    assert "TRAIN-DECREASE-OK" in out
+
+
+def test_moe_sharded_matches_einsum_path():
+    out = run_payload("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_smoke_config
+        from repro.models import build_model
+        from repro.models.moe import moe_ffn, moe_ffn_sharded
+        from repro.launch.mesh import make_debug_mesh
+
+        mesh = make_debug_mesh(data=2, model=2)
+        cfg = get_smoke_config("qwen3_moe_235b")  # 8 experts, top-4
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        lp = jax.tree_util.tree_map(lambda a: a[0], params["layers"]["moe"])
+        B, S = 4, 8
+        x = jax.random.normal(jax.random.PRNGKey(3), (B, S, cfg.d_model),
+                              jnp.float32)
+        # einsum reference with groups == data shards
+        ref = moe_ffn(x, lp, cfg, num_groups=2)
+        with mesh:
+            out = jax.jit(lambda x, p: moe_ffn_sharded(x, p, cfg, mesh))(x, lp)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+        # gradients flow through the shard_map path
+        g = jax.grad(lambda x: jnp.sum(
+            moe_ffn_sharded(x, lp, cfg, mesh) ** 2))(x)
+        assert bool(jnp.all(jnp.isfinite(g)))
+        print("MOE-SHARDED-OK")
+    """)
+    assert "MOE-SHARDED-OK" in out

@@ -1,0 +1,113 @@
+"""Pallas kernels vs jnp oracles (interpret mode on CPU), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import (lk_mvm_pallas, lk_mvm_ref, rbf_gram_pallas,
+                           rbf_gram_ref)
+
+SHAPES_MVM = [
+    # (B, n, m)
+    (1, 8, 8),
+    (1, 16, 24),
+    (3, 32, 16),
+    (2, 130, 70),   # non-divisible by block
+    (4, 64, 128),
+]
+DTYPES = [jnp.float32]
+
+
+def _mvm_problem(B, n, m, dtype, seed=0):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    A = jax.random.normal(k1, (n, n), dtype)
+    K1 = A @ A.T / n + 0.5 * jnp.eye(n, dtype=dtype)
+    Bm = jax.random.normal(k2, (m, m), dtype)
+    K2 = Bm @ Bm.T / m + 0.5 * jnp.eye(m, dtype=dtype)
+    lens = jax.random.randint(k3, (n,), 1, m + 1)
+    mask = (jnp.arange(m)[None, :] < lens[:, None]).astype(dtype)
+    u = jax.random.normal(k4, (B, n, m), dtype) * mask
+    return K1, K2, mask, u
+
+
+@pytest.mark.parametrize("shape", SHAPES_MVM)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("block", [(16, 16), (128, 128)])
+def test_lk_mvm_pallas_matches_ref(shape, dtype, block):
+    B, n, m = shape
+    K1, K2, mask, u = _mvm_problem(B, n, m, dtype)
+    noise = 0.37
+    out = lk_mvm_pallas(K1, K2, mask, u, noise, block_n=block[0],
+                        block_m=block[1], interpret=True)
+    ref = lk_mvm_ref(K1, K2, mask, u, noise)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    assert out.dtype == ref.dtype
+
+
+def test_lk_mvm_pallas_leading_batch_dims():
+    K1, K2, mask, u = _mvm_problem(6, 16, 12, jnp.float32)
+    u4 = u.reshape(2, 3, 16, 12)
+    out = lk_mvm_pallas(K1, K2, mask, u4, 0.1, block_n=16, block_m=16,
+                        interpret=True)
+    ref = lk_mvm_ref(K1, K2, mask, u4, 0.1)
+    assert out.shape == (2, 3, 16, 12)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("n,p,d", [(8, 8, 3), (32, 16, 7), (130, 70, 10),
+                                   (64, 64, 1), (16, 16, 260)])
+def test_rbf_gram_pallas_matches_ref(n, p, d):
+    key = jax.random.PRNGKey(1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x1 = jax.random.uniform(k1, (n, d), jnp.float32)
+    x2 = jax.random.uniform(k2, (p, d), jnp.float32)
+    ls = jnp.exp(jax.random.normal(k3, (d,), jnp.float32) * 0.3)
+    out = rbf_gram_pallas(x1, x2, ls, 1.7, block_n=32, block_d=64,
+                          interpret=True)
+    ref = rbf_gram_ref(x1, x2, ls, 1.7)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5,
+                               atol=3e-5)
+
+
+def test_rbf_gram_symmetric_unit_diag():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.uniform(key, (40, 5), jnp.float32)
+    ls = jnp.ones((5,), jnp.float32)
+    K = np.asarray(rbf_gram_pallas(x, x, ls, 1.0, block_n=16, interpret=True))
+    np.testing.assert_allclose(K, K.T, atol=1e-6)
+    np.testing.assert_allclose(np.diag(K), 1.0, atol=1e-6)
+    assert K.min() >= 0.0 and K.max() <= 1.0 + 1e-6
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(2, 40), m=st.integers(2, 40), B=st.integers(1, 3),
+       seed=st.integers(0, 1000))
+def test_property_lk_mvm_random_shapes(n, m, B, seed):
+    K1, K2, mask, u = _mvm_problem(B, n, m, jnp.float32, seed)
+    out = lk_mvm_pallas(K1, K2, mask, u, 0.05, block_n=16, block_m=16,
+                        interpret=True)
+    ref = lk_mvm_ref(K1, K2, mask, u, 0.05)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5,
+                               atol=3e-5)
+
+
+def test_lk_mvm_pallas_inside_cg():
+    """The Pallas MVM is a drop-in operator for the CG solver."""
+    from functools import partial
+
+    from repro.core import cg_solve, lk_operator
+
+    K1, K2, mask, u = _mvm_problem(1, 24, 18, jnp.float32)
+    b = u[0]
+    A_pallas = partial(lk_mvm_pallas, K1, K2, mask, noise=0.5, block_n=16,
+                       block_m=16, interpret=True)
+    A_ref = lk_operator(K1, K2, mask, 0.5)
+    x1 = cg_solve(A_pallas, b, tol=1e-5, max_iters=500).x
+    x2 = cg_solve(A_ref, b, tol=1e-5, max_iters=500).x
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), rtol=1e-3,
+                               atol=1e-4)
