@@ -1,0 +1,119 @@
+"""Backend benchmark: MLL evaluation and posterior-mean wall time per engine.
+
+Times one jitted MLL value+grad evaluation and one posterior-mean solve for
+each backend over a grid of (n, m) problem sizes, and writes
+``BENCH_backends.json`` so later PRs have a perf trajectory to compare
+against.
+
+Notes on interpretation:
+  * ``dense`` is O(n^3 m^3) — it drops out of the sweep past
+    ``dense_max_nm`` observed cells.
+  * ``pallas`` off-TPU runs the kernel in *interpret mode*, which is a
+    correctness path, not a perf path; its CPU timings are reported for
+    trajectory only and capped at ``pallas_max_n`` rows. On TPU the same
+    backend compiles to the fused kernel.
+
+    PYTHONPATH=src python benchmarks/bench_backends.py
+"""
+from __future__ import annotations
+
+import json
+import platform
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (LKGPConfig, get_engine, gram_matrices, init_params,
+                        make_mll, rademacher_probes)
+from repro.data import sample_task
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)  # warmup / compile
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e3  # ms
+
+
+def _bench_one(backend: str, n: int, m: int, cfg: LKGPConfig, seed: int = 0):
+    task = sample_task(seed, n=n, m=m, d=7)
+    X = jnp.asarray(task.X)
+    t = jnp.asarray(task.t, X.dtype)
+    Y = jnp.asarray(task.Y, X.dtype)
+    mask = jnp.asarray(task.mask, X.dtype)
+    d = X.shape[1]
+    params = init_params(d, X.dtype)
+    engine = get_engine(backend)
+    mll = make_mll(cfg, engine)
+    probes = (None if engine.exact else
+              rademacher_probes(jax.random.PRNGKey(0), cfg.slq_probes, mask,
+                                X.dtype))
+
+    vg = jax.jit(jax.value_and_grad(
+        lambda p: mll(p, X, t, Y, mask, probes)))
+    mll_ms = _time(lambda: vg(params))
+
+    K1, K2 = gram_matrices(params, X, t, cfg.t_kernel, cfg.jitter)
+    noise = jnp.exp(params.raw_noise)
+
+    @jax.jit
+    def posterior_mean():
+        A = engine.operator_from_grams(K1, K2, mask, noise)
+        alpha = engine.solve(A, Y * mask, cfg)
+        return jnp.einsum("aj,jm,mk->ak", K1, alpha, K2)
+
+    mean_ms = _time(posterior_mean)
+    return {"backend": backend, "n": n, "m": m,
+            "n_obs": int(np.sum(task.mask)),
+            "mll_eval_ms": round(mll_ms, 3),
+            "posterior_mean_ms": round(mean_ms, 3)}
+
+
+def main(sizes=((16, 12), (32, 20), (64, 32), (128, 50)),
+         backends=("dense", "iterative", "pallas"),
+         dense_max_nm: int = 64 * 32, pallas_max_n: int = 32,
+         out_path: str = "BENCH_backends.json", out=print):
+    cfg = LKGPConfig(cg_tol=1e-4, cg_max_iters=2000, slq_probes=8,
+                     slq_iters=15)
+    out("# bench_backends: MLL eval + posterior-mean wall time per engine")
+    out("backend,n,m,mll_eval_ms,posterior_mean_ms")
+    results = []
+    for n, m in sizes:
+        for backend in backends:
+            if backend == "dense" and n * m > dense_max_nm:
+                out(f"dense,{n},{m},skipped(n*m>{dense_max_nm}),")
+                continue
+            if backend == "pallas" and n > pallas_max_n \
+                    and jax.default_backend() != "tpu":
+                out(f"pallas,{n},{m},skipped(interpret-mode cap),")
+                continue
+            row = _bench_one(backend, n, m, cfg)
+            results.append(row)
+            out(f"{backend},{n},{m},{row['mll_eval_ms']},"
+                f"{row['posterior_mean_ms']}")
+    payload = {
+        "meta": {
+            "jax_backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "platform": platform.platform(),
+            "config": {"cg_tol": cfg.cg_tol, "slq_probes": cfg.slq_probes,
+                       "slq_iters": cfg.slq_iters},
+        },
+        "results": results,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    out(f"# wrote {out_path} ({len(results)} rows)")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -30,7 +30,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 from scipy.optimize import least_squares
 
-from repro.core import LKGP, LKGPConfig, matern12
+from repro.core import LKGPConfig, fit, posterior
 from repro.data import benchmark_cutoffs, sample_task
 
 
@@ -38,9 +38,9 @@ from repro.data import benchmark_cutoffs, sample_task
 # baselines
 # --------------------------------------------------------------------------
 def lkgp_predict(task, seed):
-    model = LKGP(LKGPConfig(lbfgs_iters=40, seed=seed))
-    model.fit(task.X, task.t, task.Y, task.mask)
-    mean, var = model.predict_final(jax.random.PRNGKey(seed))
+    state = fit(task.X, task.t, task.Y, task.mask,
+                LKGPConfig(lbfgs_iters=40, seed=seed))
+    mean, var = posterior(state).final(jax.random.PRNGKey(seed))
     return np.asarray(mean), np.asarray(var)
 
 
@@ -180,9 +180,9 @@ def ablate_t_kernel(n_seeds: int = 3, n: int = 24, m: int = 20,
             lens = benchmark_cutoffs(budget, n, m, seed)
             mask = (np.arange(m)[None, :] < lens[:, None]).astype(np.float64)
             task = task_full._replace(mask=mask, Y=task_full.Y_full * mask)
-            model = LKGP(LKGPConfig(t_kernel=kern, lbfgs_iters=40, seed=seed))
-            model.fit(task.X, task.t, task.Y, task.mask)
-            mean, var = model.predict_final(jax.random.PRNGKey(seed))
+            state = fit(task.X, task.t, task.Y, task.mask,
+                        LKGPConfig(t_kernel=kern, lbfgs_iters=40, seed=seed))
+            mean, var = posterior(state).final(jax.random.PRNGKey(seed))
             mse, llh = _score(np.asarray(mean), np.asarray(var),
                               task_full.Y_full[:, -1])
             mses.append(mse)

@@ -3,8 +3,9 @@ LM training runs (the paper's AutoML use case, complete loop).
 
 8 hyper-parameter configurations (learning rate x weight decay) of the
 reduced RWKV-6 arch train on the synthetic token pipeline; after every
-2 "epochs" the FreezeThawScheduler fits the LKGP to all partial accuracy
-curves and stops runs predicted to end badly, reallocating budget.
+2 "epochs" the FreezeThawScheduler folds the new observations into its
+LKGP state (``extend`` + warm-started ``refit``) and stops runs predicted
+to end badly, reallocating budget.
 
     PYTHONPATH=src python examples/automl_early_stopping.py
 """

@@ -12,7 +12,7 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 
-from repro.core import LKGP, LKGPConfig
+from repro.core import LKGPConfig, fit, posterior
 from repro.data import sample_task
 
 
@@ -43,9 +43,9 @@ def ascii_panel(t, y_obs, mask, samples, y_true, width=64, height=12):
 def main():
     task = sample_task(seed=3, n=16, m=20, d=7,
                        observed_fraction=(0.15, 0.85))
-    model = LKGP(LKGPConfig(lbfgs_iters=50, posterior_samples=128))
-    model.fit(task.X, task.t, task.Y, task.mask)
-    samples = np.asarray(model.posterior_samples(jax.random.PRNGKey(0)))
+    state = fit(task.X, task.t, task.Y, task.mask,
+                LKGPConfig(lbfgs_iters=50, posterior_samples=128))
+    samples = np.asarray(posterior(state).samples(jax.random.PRNGKey(0)))
 
     inside = []
     show = [int(np.argmax(task.mask.sum(1))), int(np.argmin(task.mask.sum(1)))]

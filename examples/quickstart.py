@@ -9,7 +9,7 @@ jax.config.update("jax_enable_x64", True)
 
 import numpy as np
 
-from repro.core import LKGP, LKGPConfig
+from repro.core import LKGPConfig, fit, posterior
 from repro.data import sample_task
 
 
@@ -19,15 +19,14 @@ def main():
     print(f"task: X {task.X.shape}, curves {task.Y.shape}, "
           f"{int(task.mask.sum())}/{task.mask.size} values observed")
 
-    model = LKGP(LKGPConfig(lbfgs_iters=50))
-    model.fit(task.X, task.t, task.Y, task.mask)
-    res = model.fit_result
+    state = fit(task.X, task.t, task.Y, task.mask, LKGPConfig(lbfgs_iters=50))
+    res = state.fit_result
     print(f"fit: {res.n_iters} L-BFGS iters, {res.n_evals} evals, "
-          f"objective {res.fun:.4f} (method: {model.mll_method_used})")
+          f"objective {res.fun:.4f} (backend: {state.backend_used})")
     print(f"learned noise sigma^2 = "
-          f"{float(np.exp(model.params.raw_noise)):.2e}")
+          f"{float(np.exp(state.params.raw_noise)):.2e}")
 
-    mean, var = model.predict_final()
+    mean, var = posterior(state).final()
     truth = task.Y_full[:, -1]
     err = np.abs(np.asarray(mean) - truth)
     z = err / np.sqrt(np.asarray(var))

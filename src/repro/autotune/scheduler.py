@@ -1,9 +1,12 @@
 """LKGP-driven early-stopping scheduler (the paper's AutoML application).
 
 Freeze-thaw-style loop over a pool of training runs:
-  1. every ``refit_every`` epochs, fit an LKGP to all partial curves;
-  2. predict each run's final-epoch metric (Matheron posterior over the
-     full grid);
+  1. every ``refit_every`` epochs, fold the new partial-curve observations
+     into the model state with ``extend`` (incremental conditioning) and
+     re-optimise hyper-parameters with ``refit``, warm-started from the
+     previous fit — no model is rebuilt from scratch;
+  2. predict each run's final-epoch metric via ``Posterior.final`` (exact
+     mean from the cached CG solve + Matheron variance);
   3. stop runs whose predicted final value is below the best observed /
      predicted value with high confidence (UCB rule), reallocating their
      remaining budget to survivors.
@@ -20,7 +23,7 @@ from typing import Callable
 import jax
 import numpy as np
 
-from ..core import LKGP, LKGPConfig
+from ..core import LKGPConfig, LKGPState, extend, fit, posterior, refit
 
 __all__ = ["AutotuneConfig", "FreezeThawScheduler"]
 
@@ -33,6 +36,8 @@ class AutotuneConfig:
     ucb_beta: float = 1.0          # stop if pred + beta*std < best estimate
     maximize: bool = True
     gp: LKGPConfig = field(default_factory=lambda: LKGPConfig(lbfgs_iters=30))
+    # L-BFGS budget for warm-started refits; None -> gp.lbfgs_iters.
+    refit_lbfgs_iters: int | None = None
 
 
 class FreezeThawScheduler:
@@ -49,7 +54,7 @@ class FreezeThawScheduler:
         self.active = np.ones(n, bool)
         self.seed = seed
         self.history: list[dict] = []
-        self.model: LKGP | None = None
+        self.state: LKGPState | None = None
 
     # -- core loop -----------------------------------------------------------
     def run(self, total_epoch_budget: int | None = None) -> dict:
@@ -73,14 +78,22 @@ class FreezeThawScheduler:
             epoch += 1
         return self.summary(spent)
 
+    def _sign(self) -> float:
+        return 1.0 if self.cfg.maximize else -1.0
+
     def _refit_and_stop(self, epochs_done: int):
         cfg = self.cfg
         t = np.arange(1.0, self.Y.shape[1] + 1.0)
-        sign = 1.0 if cfg.maximize else -1.0
-        model = LKGP(cfg.gp)
-        model.fit(self.X, t, sign * self.Y, self.mask)
-        self.model = model
-        mean, var = model.predict_final(
+        sign = self._sign()
+        if self.state is None:
+            # Cold start: first fit of the pool's partial curves.
+            self.state = fit(self.X, t, sign * self.Y, self.mask, cfg.gp)
+        else:
+            # Incremental conditioning + warm-started hyper-parameters.
+            self.state = extend(self.state, sign * self.Y, self.mask)
+            self.state = refit(self.state,
+                               lbfgs_iters=cfg.refit_lbfgs_iters)
+        mean, var = posterior(self.state).final(
             key=jax.random.PRNGKey(self.seed + epochs_done))
         mean = np.asarray(mean)
         std = np.sqrt(np.maximum(np.asarray(var), 0.0))
@@ -97,14 +110,15 @@ class FreezeThawScheduler:
         })
 
     def summary(self, spent: int) -> dict:
-        t = np.arange(1.0, self.Y.shape[1] + 1.0)
-        obs_best = float(np.max(self.Y[self.mask > 0])) if self.mask.any() else None
-        # final prediction pass for reporting
+        best_fn = np.max if self.cfg.maximize else np.min
+        obs_best = float(best_fn(self.Y[self.mask > 0])) if self.mask.any() else None
+        # final prediction pass for reporting (back in raw metric units:
+        # the GP is fit on sign * Y, so undo the sign here)
         pred_mean = None
-        if self.model is not None:
-            mean, _ = self.model.predict_final(
+        if self.state is not None:
+            mean, _ = posterior(self.state).final(
                 key=jax.random.PRNGKey(self.seed + 999))
-            pred_mean = np.asarray(mean).tolist()
+            pred_mean = (self._sign() * np.asarray(mean)).tolist()
         return {
             "epochs_spent": spent,
             "observed_best": obs_best,

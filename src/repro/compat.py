@@ -1,0 +1,38 @@
+"""Version shims for jax API drift.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the ``jax``
+top level, and its replication-check kwarg was renamed
+``check_rep`` -> ``check_vma`` along the way. Every shard_map call site in
+this repo goes through :func:`shard_map` below so the rest of the code can
+use the modern spelling on any jax in the supported range.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+try:  # modern jax: top-level export
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# The check_rep -> check_vma rename happened independently of the top-level
+# export, so detect the kwarg from the signature rather than the location.
+try:
+    _CHECK_KW = ("check_vma"
+                 if "check_vma" in inspect.signature(_shard_map).parameters
+                 else "check_rep")
+except (ValueError, TypeError):  # signature unavailable: assume modern name
+    _CHECK_KW = "check_vma"
+
+__all__ = ["shard_map"]
+
+
+@functools.wraps(_shard_map)
+def shard_map(f=None, /, *, mesh, in_specs, out_specs, check_vma=True):
+    kwargs = {_CHECK_KW: check_vma}
+    if f is None:
+        return functools.partial(_shard_map, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, **kwargs)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

@@ -1,23 +1,56 @@
-"""Core library: the paper's contribution (Latent Kronecker GP)."""
+"""Core library: the paper's contribution (Latent Kronecker GP).
+
+Layered as state -> engines -> posterior:
+
+* :mod:`~repro.core.state` — immutable :class:`LKGPState` pytree and the
+  functional API (``fit``, ``fit_batch``, ``extend``, ``refit``);
+* :mod:`~repro.core.engines` — the :class:`InferenceEngine` protocol and
+  registry of backends (``dense`` / ``iterative`` / ``pallas`` /
+  ``distributed``) selected by ``LKGPConfig.backend``;
+* :mod:`~repro.core.posterior` — lazy :class:`Posterior` with a cached
+  ``K^{-1} y`` shared between the exact mean and Matheron samples;
+* :mod:`~repro.core.lkgp` — the legacy :class:`LKGP` facade.
+
+Supporting numerics: grid-form CG (:mod:`~repro.core.cg`), stochastic
+Lanczos quadrature (:mod:`~repro.core.slq`), the latent-Kronecker MVM
+(:mod:`~repro.core.mvm`), Matheron sampling, transforms, and priors.
+"""
 from .cg import CGResult, cg_solve
+from .engines import (ENGINES, CustomMVMEngine, DenseEngine,
+                      DistributedEngine, InferenceEngine, IterativeEngine,
+                      PallasEngine, get_engine, list_backends, make_mll,
+                      make_mll_iterative, mll_cholesky, register_engine)
 from .gp_kernels import KERNELS_1D, matern12, matern32, matern52, rbf_ard
 from .lbfgs import LBFGSResult, lbfgs_minimize
-from .lkgp import (LKGP, LKGPConfig, LKGPParams, gram_matrices, init_params,
-                   log_prior, make_mll_iterative, mll_cholesky)
+from .lkgp import LKGP
 from .matheron import sample_posterior_grid
 from .mvm import (grid_to_packed, joint_cov_packed, kron_dense, lk_mvm,
                   lk_operator, packed_to_grid)
+from .posterior import Posterior, joint_grams, posterior
 from .priors import noise_prior_logpdf, x_lengthscale_prior_logpdf
 from .slq import lanczos, rademacher_probes, slq_logdet
+from .state import (GPData, LKGPConfig, LKGPParams, LKGPState, extend, fit,
+                    fit_batch, gram_matrices, init_params, log_prior, refit,
+                    resolve_backend, unstack)
 from .transforms import TTransform, XTransform, YTransform
 
 __all__ = [
+    # solvers / numerics
     "CGResult", "cg_solve", "KERNELS_1D", "matern12", "matern32", "matern52",
-    "rbf_ard", "LBFGSResult", "lbfgs_minimize", "LKGP", "LKGPConfig",
-    "LKGPParams", "gram_matrices", "init_params", "log_prior",
-    "make_mll_iterative", "mll_cholesky", "sample_posterior_grid",
+    "rbf_ard", "LBFGSResult", "lbfgs_minimize", "sample_posterior_grid",
     "grid_to_packed", "joint_cov_packed", "kron_dense", "lk_mvm",
     "lk_operator", "packed_to_grid", "noise_prior_logpdf",
     "x_lengthscale_prior_logpdf", "lanczos", "rademacher_probes",
     "slq_logdet", "TTransform", "XTransform", "YTransform",
+    # state + functional API
+    "LKGPState", "GPData", "LKGPConfig", "LKGPParams", "fit", "fit_batch",
+    "extend", "refit", "unstack", "resolve_backend", "gram_matrices",
+    "init_params", "log_prior",
+    # engines
+    "InferenceEngine", "ENGINES", "get_engine", "register_engine",
+    "list_backends", "DenseEngine", "IterativeEngine", "PallasEngine",
+    "DistributedEngine", "CustomMVMEngine", "make_mll", "make_mll_iterative",
+    "mll_cholesky",
+    # posterior + facade
+    "Posterior", "posterior", "joint_grams", "LKGP",
 ]

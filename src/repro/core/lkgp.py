@@ -1,4 +1,4 @@
-"""Latent Kronecker Gaussian Process (LKGP) — the paper's model.
+"""Latent Kronecker Gaussian Process (LKGP) — backward-compatible facade.
 
 Model (paper App. B):
   f ~ GP(0, k1(x, x') * k2(t, t')),
@@ -6,293 +6,123 @@ Model (paper App. B):
   k2 = Matern-1/2 over progression (scalar lengthscale + outputscale),
   homoskedastic Gaussian noise sigma^2; 10 raw parameters for d = 7.
 
-Two marginal-likelihood paths:
-  * "cholesky"  — exact, O(N^3): the paper's naive baseline. Implemented
-    with a dynamic-mask trick (unobserved rows/cols zeroed, unit diagonal)
-    so it stays jittable; equals the packed-submatrix MLL exactly.
-  * "iterative" — the paper's method: batched CG solves + stochastic Lanczos
-    quadrature for the log-det, with gradients via the quadratic-form trick
-    (Gardner et al., 2018), O(n^2 m + n m^2) per MVM.
+The model layer proper lives in three sibling modules:
 
-Fitting maximises (MLL + log prior) / N with L-BFGS on log-space parameters.
+* :mod:`repro.core.state`     — immutable :class:`LKGPState` + functional
+  ``fit`` / ``fit_batch`` / ``extend`` / ``refit``;
+* :mod:`repro.core.engines`   — pluggable inference backends
+  (dense / iterative / pallas / distributed) behind ``LKGPConfig.backend``;
+* :mod:`repro.core.posterior` — lazy :class:`Posterior` with a cached
+  ``K^{-1} y`` solve shared between the mean and Matheron samples.
+
+This module re-exports all of that and keeps the original mutable
+:class:`LKGP` class as a thin wrapper for existing call sites. New code
+should prefer the functional API::
+
+    state = fit(X, t, Y, mask, LKGPConfig(backend="iterative"))
+    post = posterior(state)
+    mean, var = post.final()
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from functools import partial
-from typing import NamedTuple
+# Re-exports: the historical public surface of this module.
+from .engines import (CustomMVMEngine, DenseEngine, DistributedEngine,
+                      InferenceEngine, IterativeEngine, PallasEngine,
+                      get_engine, list_backends, make_mll, make_mll_iterative,
+                      mll_cholesky, register_engine)
+from .posterior import Posterior, joint_grams, posterior
+from .state import (GPData, LKGPConfig, LKGPParams, LKGPState, extend, fit,
+                    fit_batch, gram_matrices, init_params, log_prior, refit,
+                    resolve_backend, unstack)
 
-import jax
-import jax.flatten_util
-import jax.numpy as jnp
-import numpy as np
+__all__ = ["LKGPConfig", "LKGPParams", "LKGP", "LKGPState", "GPData",
+           "init_params", "gram_matrices", "mll_cholesky",
+           "make_mll_iterative", "make_mll", "log_prior", "fit", "fit_batch",
+           "extend", "refit", "unstack", "resolve_backend", "Posterior",
+           "posterior", "joint_grams", "InferenceEngine", "get_engine",
+           "register_engine", "list_backends", "DenseEngine",
+           "IterativeEngine", "PallasEngine", "DistributedEngine",
+           "CustomMVMEngine"]
 
-from . import gp_kernels as gk
-from .cg import cg_solve
-from .lbfgs import lbfgs_minimize
-from .matheron import sample_posterior_grid
-from .mvm import kron_dense, lk_operator
-from .priors import noise_prior_logpdf, x_lengthscale_prior_logpdf
-from .slq import rademacher_probes, slq_logdet
-from .transforms import TTransform, XTransform, YTransform
-
-__all__ = ["LKGPConfig", "LKGPParams", "LKGP", "init_params", "gram_matrices",
-           "mll_cholesky", "make_mll_iterative", "log_prior"]
-
-_LOG_2PI = math.log(2.0 * math.pi)
+# Legacy names for the backends as reported by ``mll_method_used``.
+_LEGACY_METHOD = {"dense": "cholesky"}
 
 
-class LKGPParams(NamedTuple):
-    """Raw (log-space) parameters; positive values are exp(raw)."""
-    raw_x_lengthscale: jnp.ndarray  # (d,)
-    raw_t_lengthscale: jnp.ndarray  # ()
-    raw_outputscale: jnp.ndarray    # ()
-    raw_noise: jnp.ndarray          # ()
-
-
-@dataclass(frozen=True)
-class LKGPConfig:
-    t_kernel: str = "matern12"
-    mll_method: str = "auto"        # "cholesky" | "iterative" | "auto"
-    auto_cholesky_max: int = 800    # N_obs threshold for "auto"
-    cg_tol: float = 0.01            # paper App. B
-    cg_max_iters: int = 10_000      # paper App. B
-    slq_probes: int = 16
-    slq_iters: int = 25
-    jitter: float = 1e-6
-    lbfgs_iters: int = 100
-    posterior_samples: int = 64
-    seed: int = 0
-    use_pallas: bool = False        # route MVMs through the Pallas TPU kernel
-
-
-def init_params(d: int, dtype=jnp.float64) -> LKGPParams:
-    """Initialise at prior means / paper defaults."""
-    return LKGPParams(
-        raw_x_lengthscale=jnp.full((d,), math.sqrt(2.0) + 0.5 * math.log(d), dtype),
-        raw_t_lengthscale=jnp.asarray(math.log(0.25), dtype),
-        raw_outputscale=jnp.asarray(0.0, dtype),
-        raw_noise=jnp.asarray(-4.0, dtype),
-    )
-
-
-def gram_matrices(params: LKGPParams, X: jnp.ndarray, t: jnp.ndarray,
-                  t_kernel: str = "matern12", jitter: float = 1e-6):
-    """K1 (n, n) over configs and K2 (m, m) over progressions (jittered)."""
-    k2fn = gk.KERNELS_1D[t_kernel]
-    K1 = gk.rbf_ard(X, X, jnp.exp(params.raw_x_lengthscale))
-    K2 = k2fn(t, t, jnp.exp(params.raw_t_lengthscale),
-              jnp.exp(params.raw_outputscale))
-    K1 = K1 + jitter * jnp.eye(X.shape[0], dtype=K1.dtype)
-    K2 = K2 + jitter * jnp.eye(t.shape[0], dtype=K2.dtype)
-    return K1, K2
-
-
-def log_prior(params: LKGPParams, d: int) -> jnp.ndarray:
-    return (x_lengthscale_prior_logpdf(params.raw_x_lengthscale, d)
-            + noise_prior_logpdf(params.raw_noise))
-
-
-def mll_cholesky(params: LKGPParams, X, t, Y, mask, t_kernel: str = "matern12",
-                 jitter: float = 1e-6) -> jnp.ndarray:
-    """Exact MLL of the observed block — the paper's NAIVE baseline.
-
-    O(n^3 m^3) time / O(n^2 m^2) space. Dynamic-mask construction: the full
-    (nm x nm) joint covariance has unobserved rows/cols zeroed and a unit
-    diagonal placed on unobserved cells, so its Cholesky factorisation
-    reproduces the observed-block log-det and solve exactly while remaining
-    jittable (no data-dependent shapes).
-    """
-    K1, K2 = gram_matrices(params, X, t, t_kernel, jitter)
-    noise = jnp.exp(params.raw_noise)
-    mv = mask.reshape(-1)
-    y = (Y * mask).reshape(-1)
-    K = kron_dense(K1, K2) * (mv[:, None] * mv[None, :])
-    K = K + jnp.diag(noise * mv + (1.0 - mv))
-    L = jnp.linalg.cholesky(K)
-    alpha = jax.scipy.linalg.cho_solve((L, True), y)
-    N = jnp.sum(mask)
-    logdet = 2.0 * jnp.sum(jnp.log(jnp.diag(L)) * 1.0)  # unobserved diag = 1 -> log 0
-    return -0.5 * jnp.dot(y, alpha) - 0.5 * logdet - 0.5 * N * _LOG_2PI
-
-
-def make_mll_iterative(cfg: LKGPConfig, mvm_impl=None):
-    """Iterative MLL with custom VJP (quadratic-form gradient trick).
-
-    Returns ``mll(params, X, t, Y, mask, probes)``. ``probes`` are fixed
-    Rademacher vectors in the observed subspace, shared between the SLQ
-    log-det estimate and the stochastic trace gradients; fixing them makes
-    the objective deterministic, which the L-BFGS line search requires.
-    """
-
-    def _operator(params, X, t, mask):
-        K1, K2 = gram_matrices(params, X, t, cfg.t_kernel, cfg.jitter)
-        noise = jnp.exp(params.raw_noise)
-        if mvm_impl is not None:
-            return partial(mvm_impl, K1, K2, mask, noise=noise)
-        return lk_operator(K1, K2, mask, noise)
-
-    @jax.custom_vjp
-    def mll(params, X, t, Y, mask, probes):
-        value, _ = _fwd(params, X, t, Y, mask, probes)
-        return value
-
-    def _fwd(params, X, t, Y, mask, probes):
-        A = _operator(params, X, t, mask)
-        Ym = Y * mask
-        rhs = jnp.concatenate([Ym[None], probes], axis=0)
-        sol = cg_solve(A, rhs, tol=cfg.cg_tol, max_iters=cfg.cg_max_iters).x
-        alpha, W = sol[0], sol[1:]
-        N = jnp.sum(mask)
-        logdet = slq_logdet(A, probes, cfg.slq_iters, N)
-        value = -0.5 * jnp.sum(Ym * alpha) - 0.5 * logdet - 0.5 * N * _LOG_2PI
-        return value, (params, X, t, mask, alpha, W, probes)
-
-    def _bwd(res, gbar):
-        params, X, t, mask, alpha, W, probes = res
-        p = probes.shape[0]
-
-        def h(pp):
-            A = _operator(pp, X, t, mask)
-            quad_alpha = jnp.sum(alpha * A(alpha))
-            quad_tr = jnp.sum(W * A(probes)) / p
-            return 0.5 * quad_alpha - 0.5 * quad_tr
-
-        gparams = jax.grad(h)(params)
-        gparams = jax.tree_util.tree_map(lambda g: gbar * g, gparams)
-        zeros = lambda a: jnp.zeros_like(a)
-        return (gparams, zeros(X), zeros(t), jnp.zeros(mask.shape, X.dtype),
-                zeros(mask), zeros(probes))
-
-    mll.defvjp(_fwd, _bwd)
-    return mll
-
-
-@dataclass
 class LKGP:
     """User-facing model: fit on partial curves, predict continuations.
 
     X: (n, d) raw hyper-parameters; t: (m,) raw progressions (e.g. epochs,
     1-indexed); Y: (n, m) metric values; mask: (n, m) 1.0 where observed.
     All data is transformed per App. B before entering the GP.
-    """
-    config: LKGPConfig = field(default_factory=LKGPConfig)
 
-    # fitted state
-    params: LKGPParams | None = None
-    x_tf: XTransform | None = None
-    t_tf: TTransform | None = None
-    y_tf: YTransform | None = None
-    _X: jnp.ndarray | None = None
-    _t: jnp.ndarray | None = None
-    _Y: jnp.ndarray | None = None
-    _mask: jnp.ndarray | None = None
-    fit_result: object | None = None
+    Thin facade over the functional API: ``fit`` stores an immutable
+    :class:`LKGPState` in ``self.state``; inference delegates to
+    :class:`Posterior`.
+    """
+
+    def __init__(self, config: LKGPConfig | None = None):
+        self.config = config if config is not None else LKGPConfig()
+        self.state: LKGPState | None = None
+        self.fit_result = None
+        self.mll_method_used: str | None = None
 
     # -- fitting ----------------------------------------------------------
     def fit(self, X, t, Y, mask, params0: LKGPParams | None = None) -> "LKGP":
-        cfg = self.config
-        X = jnp.asarray(X)
-        dtype = X.dtype
-        t = jnp.asarray(t, dtype)
-        Y = jnp.asarray(Y, dtype)
-        mask = jnp.asarray(mask, dtype)
-
-        self.x_tf = XTransform.fit(X)
-        self.t_tf = TTransform.fit(t)
-        self.y_tf = YTransform.fit(Y, mask)
-        Xn, tn, Yn = self.x_tf(X), self.t_tf(t), self.y_tf(Y)
-        self._X, self._t, self._Y, self._mask = Xn, tn, Yn, mask
-
-        d = X.shape[1]
-        n_obs = int(np.sum(np.asarray(mask)))
-        method = cfg.mll_method
-        if method == "auto":
-            method = "cholesky" if n_obs <= cfg.auto_cholesky_max else "iterative"
-        self.mll_method_used = method
-
-        if method == "cholesky":
-            def objective(p):
-                mll = mll_cholesky(p, Xn, tn, Yn, mask, cfg.t_kernel, cfg.jitter)
-                return -(mll + log_prior(p, d)) / n_obs
-        else:
-            key = jax.random.PRNGKey(cfg.seed)
-            probes = rademacher_probes(key, cfg.slq_probes, mask, dtype)
-            mll_fn = make_mll_iterative(cfg)
-
-            def objective(p):
-                mll = mll_fn(p, Xn, tn, Yn, mask, probes)
-                return -(mll + log_prior(p, d)) / n_obs
-
-        vg = jax.jit(jax.value_and_grad(objective))
-        p0 = params0 if params0 is not None else init_params(d, dtype)
-        flat0, unravel = jax.flatten_util.ravel_pytree(p0)
-
-        def value_and_grad(x):
-            f, g = vg(unravel(x.astype(dtype)))
-            return f, jax.flatten_util.ravel_pytree(g)[0]
-
-        res = lbfgs_minimize(value_and_grad, np.asarray(flat0, np.float64),
-                             max_iters=cfg.lbfgs_iters)
-        self.params = unravel(jnp.asarray(res.x, dtype))
-        self.fit_result = res
+        self.state = fit(X, t, Y, mask, self.config, params0=params0)
+        self.fit_result = getattr(self.state, "fit_result", None)
+        backend = getattr(self.state, "backend_used", None)
+        self.mll_method_used = _LEGACY_METHOD.get(backend, backend)
         return self
 
-    # -- inference --------------------------------------------------------
+    # -- fitted-state accessors (legacy attribute surface) ----------------
+    @property
+    def params(self):
+        return self.state.params if self.state is not None else None
+
+    @property
+    def x_tf(self):
+        return self.state.x_tf if self.state is not None else None
+
+    @property
+    def t_tf(self):
+        return self.state.t_tf if self.state is not None else None
+
+    @property
+    def y_tf(self):
+        return self.state.y_tf if self.state is not None else None
+
+    @property
+    def _X(self):
+        return None if self.state is None else self.state.x_tf(self.state.X)
+
+    @property
+    def _t(self):
+        return None if self.state is None else self.state.t_tf(self.state.t)
+
+    @property
+    def _Y(self):
+        return None if self.state is None else self.state.y_tf(self.state.Y)
+
+    @property
+    def _mask(self):
+        return None if self.state is None else self.state.mask
+
     def _grams(self, Xs=None):
-        cfg = self.config
-        K2 = gk.KERNELS_1D[cfg.t_kernel](
-            self._t, self._t, jnp.exp(self.params.raw_t_lengthscale),
-            jnp.exp(self.params.raw_outputscale))
-        K2 = K2 + cfg.jitter * jnp.eye(self._t.shape[0], dtype=K2.dtype)
-        ls = jnp.exp(self.params.raw_x_lengthscale)
-        if Xs is None:
-            Xa = self._X
-        else:
-            Xa = jnp.concatenate([self._X, self.x_tf(jnp.asarray(Xs, self._X.dtype))], 0)
-        K1a = gk.rbf_ard(Xa, Xa, ls)
-        return K1a, K2
+        return joint_grams(self.state, Xs)
 
-    def posterior_mean(self, Xs=None) -> jnp.ndarray:
-        """Exact posterior mean over the full grid, original y units.
+    # -- inference --------------------------------------------------------
+    def posterior(self, Xs=None) -> Posterior:
+        """Lazy posterior (optionally over additional test configs Xs)."""
+        return Posterior(self.state, Xs=Xs)
 
-        Rows [:n] are curve continuations for training configs; if Xs is
-        given, rows [n:] are predictions for new configs.
-        """
-        cfg = self.config
-        K1a, K2 = self._grams(Xs)
-        n = self._X.shape[0]
-        noise = jnp.exp(self.params.raw_noise)
-        A = lk_operator(K1a[:n, :n], K2, self._mask, noise)
-        alpha = cg_solve(A, self._Y * self._mask, tol=cfg.cg_tol,
-                         max_iters=cfg.cg_max_iters).x
-        mean = jnp.einsum("aj,jm,mk->ak", K1a[:, :n], alpha, K2)
-        return self.y_tf.inverse(mean)
+    def posterior_mean(self, Xs=None):
+        """Exact posterior mean over the full grid, original y units."""
+        return self.posterior(Xs).mean
 
-    def posterior_samples(self, key, Xs=None, n_samples: int | None = None) -> jnp.ndarray:
+    def posterior_samples(self, key, Xs=None, n_samples: int | None = None):
         """Matheron-rule posterior samples, original y units: (s, n(+n*), m)."""
-        cfg = self.config
-        n_samples = n_samples or cfg.posterior_samples
-        K1a, K2 = self._grams(Xs)
-        n = self._X.shape[0]
-        noise = jnp.exp(self.params.raw_noise)
-        samples = sample_posterior_grid(
-            key, K1a, K2, n, self._Y, self._mask, noise, n_samples,
-            cg_tol=cfg.cg_tol, cg_max_iters=cfg.cg_max_iters, jitter=cfg.jitter)
-        return self.y_tf.inverse(samples)
+        return self.posterior(Xs).samples(key, n_samples)
 
     def predict_final(self, key=None, n_samples: int | None = None):
-        """(mean, var) of the final-progression value per training config.
-
-        Mean is exact (CG); variance is estimated from Matheron samples plus
-        observation noise — the Fig. 4 protocol (predict final validation
-        accuracy from partial curves, scored by MSE and log-likelihood).
-        """
-        if key is None:
-            key = jax.random.PRNGKey(self.config.seed + 1)
-        mean = self.posterior_mean()[:, -1]
-        s = self.posterior_samples(key, n_samples=n_samples)[:, :, -1]
-        var_f = jnp.var(s, axis=0)
-        var_y = var_f + self.y_tf.inverse_var(jnp.exp(self.params.raw_noise))
-        return mean, var_y
+        """(mean, var) of the final-progression value per training config."""
+        return self.posterior().final(key=key, n_samples=n_samples)

@@ -5,10 +5,17 @@
 
 * Prior samples on the joint grid use the Kronecker factorisation
   (L1 (x) L2) Z  ==  L1 @ Z @ L2^T  at O((n+n*)^3 + m^3) cost.
-* The inverse-matrix-vector product is a batched CG solve against the masked
-  latent-Kronecker operator (grid form, zero-padded residuals).
+* The inverse-matrix-vector product is a batched solve against the masked
+  latent-Kronecker operator (grid form, zero-padded residuals) — CG by
+  default, or any engine solve via the ``solve`` hook.
 * The correction is zero-padding -> Kronecker MVM -> evaluation at test rows:
   K1[joint, train] @ u @ K2.
+
+When a cached ``alpha = K^{-1}(Y * mask)`` is supplied (see
+:class:`repro.core.posterior.Posterior`), linearity splits the solve:
+``K^{-1}(Y - F - eps) = alpha - K^{-1}(F + eps)``, so only the (F + eps)
+part is solved per call and the sample mean is exactly consistent with the
+cached exact mean.
 """
 from __future__ import annotations
 
@@ -27,12 +34,17 @@ def sample_posterior_grid(key, K1_joint: jnp.ndarray, K2: jnp.ndarray,
                           n_train: int, Y: jnp.ndarray, mask: jnp.ndarray,
                           noise, n_samples: int, cg_tol: float = 0.01,
                           cg_max_iters: int = 10_000, jitter: float = 1e-6,
-                          mvm: Callable | None = None) -> jnp.ndarray:
+                          mvm: Callable | None = None,
+                          solve: Callable | None = None,
+                          alpha: jnp.ndarray | None = None) -> jnp.ndarray:
     """Draw posterior samples over the full (train + test configs) x t grid.
 
     K1_joint: ((n+n*), (n+n*)) config kernel over [X_train; X_test].
     K2: (m, m) progression kernel on the shared t grid.
     Y, mask: (n, m) observed learning curves (grid form).
+    mvm: optional raw MVM ``mvm(K1, K2, mask, u, noise=...)`` for the CG
+      operator; solve: optional batched solver ``solve(rhs) -> K^{-1} rhs``
+      overriding CG entirely; alpha: optional cached ``K^{-1}(Y * mask)``.
     Returns samples of shape (n_samples, n+n*, m); rows [:n] are posterior
     curves for the training configs (continuations), rows [n:] for test.
     """
@@ -50,10 +62,20 @@ def sample_posterior_grid(key, K1_joint: jnp.ndarray, K2: jnp.ndarray,
     F = jnp.einsum("ij,sjm,km->sik", L1, Z, L2)
     eps = jnp.sqrt(noise) * jax.random.normal(ke, (n_samples, n_train, m), dtype)
 
-    resid = mask * (Y[None] - F[:, :n_train, :] - eps)
-    K1_tt = K1_joint[:n_train, :n_train]
-    A = lk_operator(K1_tt, K2, mask, noise)
-    u = cg_solve(A, resid, tol=cg_tol, max_iters=cg_max_iters).x  # (s, n, m)
+    if solve is None:
+        K1_tt = K1_joint[:n_train, :n_train]
+        if mvm is None:
+            A = lk_operator(K1_tt, K2, mask, noise)
+        else:
+            A = lambda u: mvm(K1_tt, K2, mask, u, noise=noise)
+        solve = lambda rhs: cg_solve(A, rhs, tol=cg_tol,
+                                     max_iters=cg_max_iters).x
+
+    if alpha is None:
+        u = solve(mask * (Y[None] - F[:, :n_train, :] - eps))  # (s, n, m)
+    else:
+        # Reuse the cached K^{-1}(Y*mask): solve only for the (F+eps) part.
+        u = alpha[None] - solve(mask * (F[:, :n_train, :] + eps))
 
     # Correction: (k1(., X) (x) k2(., t)) P^T u  ==  K1[:, :n] @ u @ K2.
     corr = jnp.einsum("aj,sjm,mk->sak", K1_joint[:, :n_train], u, K2)

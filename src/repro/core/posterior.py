@@ -1,0 +1,153 @@
+"""Lazy posterior over the latent grid.
+
+A :class:`Posterior` is cheap to construct: nothing is computed until a
+property is read. The expensive CG solve of ``alpha = K^{-1} (Y * mask)``
+is computed once and cached, then shared between
+
+* the exact posterior mean  ``K1[:, :n] @ alpha @ K2``  and
+* Matheron-rule samples: by linearity,
+  ``K^{-1}(Y - F - eps) = alpha - K^{-1}(F + eps)``, so each sampling call
+  only solves for the (F + eps) part and reuses the cached ``alpha`` — the
+  sample mean is exactly consistent with the exact mean.
+
+All solves go through the inference engine resolved from the state's
+config (or an explicitly provided engine), so the posterior path uses the
+same backend — dense, iterative, pallas, or distributed — as fitting.
+"""
+from __future__ import annotations
+
+from functools import cached_property
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import gp_kernels as gk
+from .engines import get_engine
+from .matheron import sample_posterior_grid
+from .state import LKGPState, resolve_backend
+
+__all__ = ["Posterior", "posterior", "joint_grams"]
+
+
+def joint_grams(state: LKGPState, Xs=None):
+    """K1 over [X_train; X_test] (transformed) and K2 over t (jittered).
+
+    Matches the training-time Gram construction: K2 carries the jitter, the
+    joint K1 does not (its train block is only used inside the noisy
+    operator; Cholesky call sites add jitter themselves).
+    """
+    cfg = state.config
+    p = state.params
+    Xn = state.x_tf(state.X)
+    tn = state.t_tf(state.t)
+    K2 = gk.KERNELS_1D[cfg.t_kernel](
+        tn, tn, jnp.exp(p.raw_t_lengthscale), jnp.exp(p.raw_outputscale))
+    K2 = K2 + cfg.jitter * jnp.eye(tn.shape[0], dtype=K2.dtype)
+    if Xs is None:
+        Xa = Xn
+    else:
+        Xa = jnp.concatenate([Xn, state.x_tf(jnp.asarray(Xs, Xn.dtype))], 0)
+    K1a = gk.rbf_ard(Xa, Xa, jnp.exp(p.raw_x_lengthscale))
+    return K1a, K2
+
+
+class Posterior:
+    """Lazy LKGP posterior over the full (train [+ test]) x t grid.
+
+    Rows ``[:n]`` of every product are curve continuations for the training
+    configs; if ``Xs`` was given, rows ``[n:]`` are predictions for the new
+    configs. All outputs are in original y units.
+    """
+
+    def __init__(self, state: LKGPState, Xs=None, engine=None):
+        self._state = state
+        self._Xs = Xs
+        if engine is None:
+            # An engine explicitly injected at fit() time (e.g. bound to a
+            # specific mesh) is pinned on the state; otherwise resolve from
+            # config and observation count.
+            engine = getattr(state, "engine", None)
+        if engine is None:
+            n_obs = int(np.sum(np.asarray(state.mask)))
+            engine = get_engine(resolve_backend(state.config, n_obs))
+        self._engine = engine
+
+    # -- cached pieces -----------------------------------------------------
+    @cached_property
+    def _grams(self):
+        return joint_grams(self._state, self._Xs)
+
+    @cached_property
+    def _operator(self):
+        """A = P (K1 (x) K2) P^T + sigma^2 I over the training block."""
+        K1a, K2 = self._grams
+        n = self._state.n
+        noise = jnp.exp(self._state.params.raw_noise)
+        return self._engine.operator_from_grams(
+            K1a[:n, :n], K2, self._state.mask, noise)
+
+    @cached_property
+    def alpha(self):
+        """Cached K^{-1} (Y * mask) in transformed space (grid form)."""
+        st = self._state
+        Ym = st.y_tf(st.Y) * st.mask
+        return self._engine.solve(self._operator, Ym, st.config)
+
+    # -- products ----------------------------------------------------------
+    @property
+    def mean(self) -> jnp.ndarray:
+        """Exact posterior mean over the grid: (n(+n*), m), y units."""
+        K1a, K2 = self._grams
+        n = self._state.n
+        mean_t = jnp.einsum("aj,jm,mk->ak", K1a[:, :n], self.alpha, K2)
+        return self._state.y_tf.inverse(mean_t)
+
+    def samples(self, key, n_samples: int | None = None) -> jnp.ndarray:
+        """Matheron-rule posterior samples: (s, n(+n*), m), y units."""
+        st = self._state
+        cfg = st.config
+        n_samples = n_samples or cfg.posterior_samples
+        K1a, K2 = self._grams
+        noise = jnp.exp(st.params.raw_noise)
+        raw = sample_posterior_grid(
+            key, K1a, K2, st.n, st.y_tf(st.Y), st.mask, noise, n_samples,
+            jitter=cfg.jitter,
+            solve=lambda rhs: self._engine.solve(self._operator, rhs, cfg),
+            alpha=self.alpha)
+        return st.y_tf.inverse(raw)
+
+    @cached_property
+    def _default_samples(self):
+        cfg = self._state.config
+        return self.samples(jax.random.PRNGKey(cfg.seed + 1))
+
+    @property
+    def variance(self) -> jnp.ndarray:
+        """Predictive variance (Matheron MC estimate + observation noise)."""
+        st = self._state
+        var_f = jnp.var(self._default_samples, axis=0)
+        return var_f + st.y_tf.inverse_var(jnp.exp(st.params.raw_noise))
+
+    def final(self, key=None, n_samples: int | None = None):
+        """(mean, var) of the final-progression value per config.
+
+        Mean is exact (cached CG solve); variance is estimated from Matheron
+        samples plus observation noise — the Fig. 4 protocol.
+        """
+        st = self._state
+        mean = self.mean[:, -1]
+        if key is None and n_samples is None:
+            s = self._default_samples[:, :, -1]   # cached; same default key
+        else:
+            if key is None:
+                key = jax.random.PRNGKey(st.config.seed + 1)
+            s = self.samples(key, n_samples)[:, :, -1]
+        var_f = jnp.var(s, axis=0)
+        var_y = var_f + st.y_tf.inverse_var(jnp.exp(st.params.raw_noise))
+        return mean, var_y
+
+
+def posterior(state: LKGPState, Xs=None, engine=None) -> Posterior:
+    """Lazy posterior for a fitted state (optionally at new configs Xs)."""
+    return Posterior(state, Xs=Xs, engine=engine)

@@ -1,0 +1,394 @@
+"""Immutable model state and the functional fitting API.
+
+The model layer is organised around three abstractions:
+
+* :class:`LKGPState` — an immutable pytree holding fitted parameters,
+  input/output transforms, and the *raw* training data. Produced by
+  :func:`fit`; consumed by every inference engine and by
+  :class:`~repro.core.posterior.Posterior`.
+* :class:`~repro.core.engines.InferenceEngine` — pluggable linear-algebra
+  backends (``dense`` / ``iterative`` / ``pallas`` / ``distributed``)
+  selected via ``LKGPConfig.backend``.
+* :class:`~repro.core.posterior.Posterior` — a lazy posterior that caches
+  the CG solve of ``K^{-1} y`` and shares it between the exact mean and
+  Matheron samples.
+
+State transitions are functional: ``fit(...) -> LKGPState``,
+``extend(state, ...) -> LKGPState`` (incremental conditioning with
+warm-started hyper-parameters), ``refit(state) -> LKGPState``. A batched
+``fit_batch`` vmaps the whole objective over independent tasks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+
+from . import gp_kernels as gk
+from .lbfgs import lbfgs_minimize
+from .priors import noise_prior_logpdf, x_lengthscale_prior_logpdf
+from .slq import rademacher_probes
+from .transforms import TTransform, XTransform, YTransform
+
+__all__ = [
+    "LKGPParams", "LKGPConfig", "GPData", "LKGPState", "init_params",
+    "gram_matrices", "log_prior", "resolve_backend", "fit", "fit_batch",
+    "extend", "refit", "unstack",
+]
+
+_LOG_2PI = math.log(2.0 * math.pi)
+
+BACKENDS = ("dense", "iterative", "pallas", "distributed")
+
+
+class LKGPParams(NamedTuple):
+    """Raw (log-space) parameters; positive values are exp(raw)."""
+    raw_x_lengthscale: jnp.ndarray  # (d,)
+    raw_t_lengthscale: jnp.ndarray  # ()
+    raw_outputscale: jnp.ndarray    # ()
+    raw_noise: jnp.ndarray          # ()
+
+
+@dataclass(frozen=True)
+class LKGPConfig:
+    """Model + inference configuration.
+
+    ``backend`` selects the inference engine (one front door for all four
+    code paths): ``"dense"`` (exact Cholesky), ``"iterative"`` (CG + SLQ),
+    ``"pallas"`` (CG + SLQ with every MVM routed through the Pallas TPU
+    kernel in :mod:`repro.kernels.ops`), ``"distributed"`` (shard_map row
+    sharding over a device mesh). ``"auto"`` resolves from the legacy
+    ``mll_method`` / ``use_pallas`` fields and the observation count.
+    """
+    t_kernel: str = "matern12"
+    backend: str = "auto"           # "auto" | dense | iterative | pallas | distributed
+    mll_method: str = "auto"        # legacy: "cholesky" | "iterative" | "auto"
+    auto_cholesky_max: int = 800    # N_obs threshold for "auto"
+    cg_tol: float = 0.01            # paper App. B
+    cg_max_iters: int = 10_000      # paper App. B
+    slq_probes: int = 16
+    slq_iters: int = 25
+    jitter: float = 1e-6
+    lbfgs_iters: int = 100
+    posterior_samples: int = 64
+    seed: int = 0
+    use_pallas: bool = False        # legacy alias for backend="pallas"
+
+
+def init_params(d: int, dtype=jnp.float64) -> LKGPParams:
+    """Initialise at prior means / paper defaults."""
+    return LKGPParams(
+        raw_x_lengthscale=jnp.full((d,), math.sqrt(2.0) + 0.5 * math.log(d), dtype),
+        raw_t_lengthscale=jnp.asarray(math.log(0.25), dtype),
+        raw_outputscale=jnp.asarray(0.0, dtype),
+        raw_noise=jnp.asarray(-4.0, dtype),
+    )
+
+
+def gram_matrices(params: LKGPParams, X: jnp.ndarray, t: jnp.ndarray,
+                  t_kernel: str = "matern12", jitter: float = 1e-6):
+    """K1 (n, n) over configs and K2 (m, m) over progressions (jittered)."""
+    k2fn = gk.KERNELS_1D[t_kernel]
+    K1 = gk.rbf_ard(X, X, jnp.exp(params.raw_x_lengthscale))
+    K2 = k2fn(t, t, jnp.exp(params.raw_t_lengthscale),
+              jnp.exp(params.raw_outputscale))
+    K1 = K1 + jitter * jnp.eye(X.shape[0], dtype=K1.dtype)
+    K2 = K2 + jitter * jnp.eye(t.shape[0], dtype=K2.dtype)
+    return K1, K2
+
+
+def log_prior(params: LKGPParams, d: int) -> jnp.ndarray:
+    return (x_lengthscale_prior_logpdf(params.raw_x_lengthscale, d)
+            + noise_prior_logpdf(params.raw_noise))
+
+
+class GPData(NamedTuple):
+    """Transformed-space training data handed to an inference engine."""
+    X: jnp.ndarray       # (n, d) in the unit hypercube
+    t: jnp.ndarray       # (m,) log-scaled to [0, 1]
+    Y: jnp.ndarray | None  # (n, m) normalised curves (None when not needed)
+    mask: jnp.ndarray    # (n, m) 1.0 where observed
+
+
+@dataclass(frozen=True)
+class LKGPState:
+    """Immutable fitted model state (a jax pytree).
+
+    Data fields hold *raw* (untransformed) training data plus the fitted
+    transforms and raw GP parameters; ``config`` is static metadata. The
+    transformed view engines consume is exposed via :attr:`data`.
+
+    ``fit`` attaches two non-pytree diagnostics with ``object.__setattr__``:
+    ``fit_result`` (the L-BFGS result) and ``backend_used``. They do not
+    survive ``tree_map`` — read them with ``getattr(state, ..., None)``.
+    """
+    params: LKGPParams
+    X: jnp.ndarray       # (n, d) raw hyper-parameters
+    t: jnp.ndarray       # (m,) raw progressions (e.g. epochs, 1-indexed)
+    Y: jnp.ndarray       # (n, m) raw metric values
+    mask: jnp.ndarray    # (n, m) 1.0 where observed
+    x_tf: XTransform
+    t_tf: TTransform
+    y_tf: YTransform
+    config: LKGPConfig = field(default_factory=LKGPConfig)
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[-2]
+
+    @property
+    def m(self) -> int:
+        return self.t.shape[-1]
+
+    @property
+    def d(self) -> int:
+        return self.X.shape[-1]
+
+    @property
+    def data(self) -> GPData:
+        """Transformed-space view of the training data (paper App. B)."""
+        return GPData(self.x_tf(self.X), self.t_tf(self.t),
+                      self.y_tf(self.Y), self.mask)
+
+    def with_params(self, params: LKGPParams) -> "LKGPState":
+        return dataclasses.replace(self, params=params)
+
+
+jax.tree_util.register_dataclass(
+    LKGPState,
+    data_fields=["params", "X", "t", "Y", "mask", "x_tf", "t_tf", "y_tf"],
+    meta_fields=["config"],
+)
+
+
+def resolve_backend(config: LKGPConfig, n_obs: int) -> str:
+    """Map config (including legacy fields) to a concrete backend name."""
+    if config.backend != "auto":
+        if config.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {config.backend!r}; "
+                             f"expected one of {BACKENDS}")
+        return config.backend
+    if config.use_pallas:
+        return "pallas"
+    if config.mll_method == "cholesky":
+        return "dense"
+    if config.mll_method == "iterative":
+        return "iterative"
+    return "dense" if n_obs <= config.auto_cholesky_max else "iterative"
+
+
+def _fit_transforms(X, t, Y, mask):
+    x_tf = XTransform.fit(X)
+    t_tf = TTransform.fit(t)
+    y_tf = YTransform.fit(Y, mask)
+    return x_tf, t_tf, y_tf
+
+
+def fit(X, t, Y, mask, config: LKGPConfig | None = None,
+        params0: LKGPParams | None = None, engine=None) -> LKGPState:
+    """Fit the LKGP and return an immutable :class:`LKGPState`.
+
+    Maximises (MLL + log prior) / N with L-BFGS on log-space parameters,
+    through the engine selected by ``config.backend`` (or an explicitly
+    provided ``engine``, e.g. a :class:`DistributedEngine` bound to a mesh).
+    """
+    from .engines import get_engine, make_mll
+
+    cfg = config if config is not None else LKGPConfig()
+    X = jnp.asarray(X)
+    dtype = X.dtype
+    t = jnp.asarray(t, dtype)
+    Y = jnp.asarray(Y, dtype)
+    mask = jnp.asarray(mask, dtype)
+
+    x_tf, t_tf, y_tf = _fit_transforms(X, t, Y, mask)
+    Xn, tn, Yn = x_tf(X), t_tf(t), y_tf(Y)
+
+    d = X.shape[1]
+    n_obs = int(np.sum(np.asarray(mask)))
+    explicit_engine = engine is not None
+    backend = engine.name if explicit_engine else resolve_backend(cfg, n_obs)
+    if engine is None:
+        engine = get_engine(backend)
+
+    mll_fn = make_mll(cfg, engine)
+    if engine.exact:
+        probes = None
+    else:
+        key = jax.random.PRNGKey(cfg.seed)
+        probes = rademacher_probes(key, cfg.slq_probes, mask, dtype)
+
+    def objective(p):
+        mll = mll_fn(p, Xn, tn, Yn, mask, probes)
+        return -(mll + log_prior(p, d)) / n_obs
+
+    vg = jax.jit(jax.value_and_grad(objective))
+    p0 = params0 if params0 is not None else init_params(d, dtype)
+    flat0, unravel = jax.flatten_util.ravel_pytree(p0)
+
+    def value_and_grad(x):
+        f, g = vg(unravel(x.astype(dtype)))
+        return f, jax.flatten_util.ravel_pytree(g)[0]
+
+    res = lbfgs_minimize(value_and_grad, np.asarray(flat0, np.float64),
+                         max_iters=cfg.lbfgs_iters)
+    state = LKGPState(params=unravel(jnp.asarray(res.x, dtype)),
+                      X=X, t=t, Y=Y, mask=mask,
+                      x_tf=x_tf, t_tf=t_tf, y_tf=y_tf, config=cfg)
+    object.__setattr__(state, "fit_result", res)
+    object.__setattr__(state, "backend_used", backend)
+    if explicit_engine:
+        # Pin an explicitly injected engine (e.g. a DistributedEngine bound
+        # to a specific mesh) so posterior()/refit()/extend() keep using it;
+        # config-resolved engines stay dynamic ("auto" re-resolves as data
+        # grows).
+        object.__setattr__(state, "engine", engine)
+    return state
+
+
+def fit_batch(X, t, Y, mask, config: LKGPConfig | None = None,
+              params0: LKGPParams | None = None) -> LKGPState:
+    """Fit B independent tasks jointly via one vmapped objective.
+
+    X: (B, n, d); t: (m,) or (B, m); Y, mask: (B, n, m). All tasks must
+    share shapes. Returns an :class:`LKGPState` whose data leaves carry a
+    leading batch dimension; :func:`unstack` splits it into per-task states.
+
+    The batched objective uses the dense (exact Cholesky) marginal
+    likelihood — it is fully vmappable (no data-dependent CG trip counts)
+    and the per-task problems this path targets are small. The B parameter
+    pytrees are optimised jointly with one L-BFGS on the concatenated
+    vector; gradients are block-separable across tasks, so each task's
+    optimum coincides with its individual fit.
+    """
+    from .engines import mll_cholesky
+
+    cfg = config if config is not None else LKGPConfig()
+    X = jnp.asarray(X)
+    dtype = X.dtype
+    B, n, d = X.shape
+    t = jnp.asarray(t, dtype)
+    if t.ndim == 1:
+        t = jnp.broadcast_to(t, (B, t.shape[0]))
+    Y = jnp.asarray(Y, dtype)
+    mask = jnp.asarray(mask, dtype)
+
+    x_tf = jax.vmap(XTransform.fit)(X)
+    t_tf = jax.vmap(TTransform.fit)(t)
+    y_tf = jax.vmap(YTransform.fit)(Y, mask)
+    Xn = jax.vmap(lambda tf, x: tf(x))(x_tf, X)
+    tn = jax.vmap(lambda tf, x: tf(x))(t_tf, t)
+    Yn = jax.vmap(lambda tf, y: tf(y))(y_tf, Y)
+
+    def obj_one(p, Xi, ti, Yi, mi):
+        n_obs = jnp.sum(mi)
+        mll = mll_cholesky(p, Xi, ti, Yi, mi, cfg.t_kernel, cfg.jitter)
+        return -(mll + log_prior(p, d)) / n_obs
+
+    def objective(pb):
+        return jnp.sum(jax.vmap(obj_one)(pb, Xn, tn, Yn, mask))
+
+    if params0 is None:
+        p0 = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (B, *a.shape)), init_params(d, dtype))
+    else:
+        p0 = params0
+    flat0, unravel = jax.flatten_util.ravel_pytree(p0)
+    vg = jax.jit(jax.value_and_grad(objective))
+
+    def value_and_grad(x):
+        f, g = vg(unravel(x.astype(dtype)))
+        return f, jax.flatten_util.ravel_pytree(g)[0]
+
+    res = lbfgs_minimize(value_and_grad, np.asarray(flat0, np.float64),
+                         max_iters=cfg.lbfgs_iters)
+    state = LKGPState(params=unravel(jnp.asarray(res.x, dtype)),
+                      X=X, t=t, Y=Y, mask=mask,
+                      x_tf=x_tf, t_tf=t_tf, y_tf=y_tf, config=cfg)
+    object.__setattr__(state, "fit_result", res)
+    object.__setattr__(state, "backend_used", "dense")
+    return state
+
+
+def unstack(state: LKGPState) -> list[LKGPState]:
+    """Split a batched state from :func:`fit_batch` into per-task states."""
+    B = state.X.shape[0]
+    return [jax.tree_util.tree_map(lambda a: a[i], state) for i in range(B)]
+
+
+def extend(state: LKGPState, new_Y, new_mask, new_X=None) -> LKGPState:
+    """Incremental conditioning: fold new observations into the state.
+
+    Two modes:
+
+    * ``new_X is None`` — ``new_Y`` / ``new_mask`` are the *full updated*
+      (n, m) grids over the existing configs (e.g. a freeze-thaw scheduler
+      observed more epochs). ``new_mask`` must be a superset of
+      ``state.mask``.
+    * ``new_X`` given — k new configs are appended; ``new_Y`` / ``new_mask``
+      are their (k, m) rows.
+
+    Output transforms are refit on the union of observed data (the Y shift
+    tracks the running max); the fitted hyper-parameters are carried over
+    unchanged as a warm start — follow with :func:`refit` to re-optimise
+    them from that warm state.
+    """
+    dtype = state.Y.dtype
+    new_Y = jnp.asarray(new_Y, dtype)
+    new_mask = jnp.asarray(new_mask, dtype)
+
+    if new_X is None:
+        if new_Y.shape != state.Y.shape:
+            raise ValueError(f"full-grid update expects shape {state.Y.shape}, "
+                             f"got {new_Y.shape}")
+        old_m, upd_m = np.asarray(state.mask), np.asarray(new_mask)
+        if np.any(upd_m < old_m):
+            raise ValueError("new_mask must be a superset of the current mask")
+        X, Y, mask = state.X, new_Y, new_mask
+    else:
+        new_X = jnp.asarray(new_X, state.X.dtype)
+        X = jnp.concatenate([state.X, new_X], axis=0)
+        Y = jnp.concatenate([state.Y, new_Y], axis=0)
+        mask = jnp.concatenate([state.mask, new_mask], axis=0)
+
+    x_tf, _, y_tf = _fit_transforms(X, state.t, Y, mask)
+    out = dataclasses.replace(state, X=X, Y=Y, mask=mask,
+                              x_tf=x_tf, y_tf=y_tf)
+    # dataclasses.replace drops the non-pytree diagnostics; carry the bound
+    # engine forward so posterior()/refit() keep using the same backend.
+    eng = getattr(state, "engine", None)
+    if eng is not None:
+        object.__setattr__(out, "engine", eng)
+    return out
+
+
+def refit(state: LKGPState, config: LKGPConfig | None = None,
+          lbfgs_iters: int | None = None, engine=None) -> LKGPState:
+    """Re-optimise hyper-parameters warm-started from ``state.params``.
+
+    ``lbfgs_iters`` is a one-call budget override: it does NOT persist into
+    the returned state's config. An engine bound by the original ``fit``
+    call is reused unless a new one is given.
+    """
+    base_cfg = config if config is not None else state.config
+    cfg = base_cfg
+    if lbfgs_iters is not None:
+        cfg = dataclasses.replace(cfg, lbfgs_iters=lbfgs_iters)
+    if engine is None:
+        engine = getattr(state, "engine", None)
+    out = fit(state.X, state.t, state.Y, state.mask, cfg,
+              params0=state.params, engine=engine)
+    if cfg is not base_cfg:
+        diag = {k: getattr(out, k, None)
+                for k in ("fit_result", "backend_used", "engine")}
+        out = dataclasses.replace(out, config=base_cfg)
+        for k, v in diag.items():
+            if v is not None:
+                object.__setattr__(out, k, v)
+    return out

@@ -23,7 +23,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from ..compat import shard_map
 
 from ..core.gp_kernels import KERNELS_1D, rbf_ard
 

@@ -164,6 +164,8 @@ def lower_cell(arch: str, shape_name: str, mesh, mesh_name: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+        cost = cost[0] if cost else {}
     n_dev = mesh.devices.size
     stats = analyze_collectives(compiled.as_text(), n_dev)
     # layer-scan trip count x grad-accum loop (see hlo_analysis caveats)
@@ -234,6 +236,8 @@ def lower_lkgp_cell(mesh, mesh_name: str, n: int = 8192, m: int = 100,
         compiled = lowered.compile()
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+        cost = cost[0] if cost else {}
     stats = analyze_collectives(compiled.as_text(), mesh.devices.size)
     chips = int(mesh.devices.size)
     # analytic per-CG-iteration costs (the MVM dominates)

@@ -15,17 +15,21 @@ import jax
 __all__ = ["make_production_mesh", "make_debug_mesh"]
 
 
+def _make_mesh(shape, axes):
+    if hasattr(jax.sharding, "AxisType"):  # axis_types landed after 0.4.x
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 2, model: int = 2, pod: int | None = None):
     """Small host-device mesh for tests (requires the XLA host-device flag)."""
     if pod is None:
-        return jax.make_mesh((data, model), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+        return _make_mesh((data, model), ("data", "model"))
+    return _make_mesh((pod, data, model), ("pod", "data", "model"))

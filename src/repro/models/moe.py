@@ -23,7 +23,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from ..compat import shard_map
 
 __all__ = ["moe_param_table", "moe_ffn", "moe_ffn_sharded", "moe_capacity"]
 

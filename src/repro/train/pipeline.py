@@ -21,7 +21,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from ..compat import shard_map
 
 __all__ = ["pipelined_forward"]
 

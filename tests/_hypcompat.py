@@ -1,0 +1,84 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The container this repo targets has no hypothesis wheel, so the property
+tests fall back to a tiny deterministic sampler: ``@given`` draws
+``max_examples`` pseudo-random examples per strategy (seeded per test name,
+so runs are reproducible) and calls the test once per example. Shrinking and
+the database are out of scope — a failing example is reported as-is.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "st"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class st:  # namespace mirroring hypothesis.strategies
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # settings() may wrap either side of given(): read the attribute
+            # from the outer wrapper first (settings applied last), then the
+            # inner function (settings applied first).
+            n = getattr(wrapper, "_hyp_max_examples",
+                        getattr(fn, "_hyp_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for i in range(n):
+                drawn = {k: s.example(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): {drawn}") from e
+
+        # Hide the drawn parameters from pytest's fixture resolution.
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in strategies]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -6,8 +6,11 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # container has no hypothesis wheel; see tests/_hypcompat.py
+    from _hypcompat import given, settings, st
 
 from repro.core import (LKGP, LKGPConfig, cg_solve, gram_matrices,
                         init_params, joint_cov_packed, kron_dense, lk_mvm,

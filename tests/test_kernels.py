@@ -3,8 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # container has no hypothesis wheel; see tests/_hypcompat.py
+    from _hypcompat import given, settings, st
 
 from repro.kernels import (lk_mvm_pallas, lk_mvm_ref, rbf_gram_pallas,
                            rbf_gram_ref)

@@ -41,7 +41,10 @@ def test_analytic_flops_close_to_hlo_single_layer():
         tokens = jax.ShapeDtypeStruct((4, 128), jnp.int32)
         c = jax.jit(lambda p, t: model.prefill(p, {"tokens": t}, 192)) \
             .lower(params, tokens).compile()
-        hlo = c.cost_analysis()["flops"]
+        ca = c.cost_analysis()
+        if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+            ca = ca[0]
+        hlo = ca["flops"]
         ana = analytic_costs(cfg, shape, chips=1)["flops_per_chip"]
         rel = abs(hlo - ana) / hlo
         print(f"hlo={hlo:.3e} analytic={ana:.3e} rel={rel:.2f}")

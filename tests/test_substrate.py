@@ -7,8 +7,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # container has no hypothesis wheel; see tests/_hypcompat.py
+    from _hypcompat import given, settings, st
 
 from repro.models.layers import (_chunked_attention, _plain_attention,
                                  chunked_ce_loss)
@@ -208,6 +211,44 @@ def test_freeze_thaw_scheduler_stops_bad_runs():
     assert best in summary["survivors"]
     assert summary["epochs_spent"] < n * m  # budget actually saved
     assert any(ev["stopped"] for ev in summary["stop_events"])
+
+
+def test_freeze_thaw_scheduler_minimize_reports_raw_units():
+    """maximize=False: summary must report the raw (un-negated) metric."""
+    jax.config.update("jax_enable_x64", True)
+    from repro.autotune import AutotuneConfig, FreezeThawScheduler
+    from repro.core import LKGPConfig
+
+    rng = np.random.default_rng(1)
+    n, m = 6, 8
+    X = rng.uniform(0, 1, (n, 3))
+    finals = 0.2 + 0.6 * X[:, 0]  # losses: smaller is better
+
+    def make_step(i):
+        state = {"e": 0}
+
+        def step():
+            state["e"] += 1
+            t = state["e"] / m
+            return float(finals[i] + (1 - finals[i]) * np.exp(-4 * t)
+                         + rng.normal(0, 0.003))
+
+        return step
+
+    sched = FreezeThawScheduler(
+        X, [make_step(i) for i in range(n)],
+        AutotuneConfig(max_epochs=m, refit_every=2, min_epochs_before_stop=4,
+                       ucb_beta=2.0, maximize=False,
+                       gp=LKGPConfig(lbfgs_iters=10)))
+    summary = sched.run()
+    # observed_best is the smallest observed loss, in raw units
+    obs = sched.Y[sched.mask > 0]
+    assert summary["observed_best"] == float(np.min(obs))
+    # predicted finals come back in raw loss units (positive, near `finals`)
+    pred = np.asarray(summary["predicted_final"])
+    assert np.all(pred > 0), pred
+    surviving_best = int(np.argmin(finals))
+    assert surviving_best in summary["survivors"]
 
 
 # --------------------------------------------------------------------------
