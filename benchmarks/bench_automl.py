@@ -1,0 +1,346 @@
+"""AutoML scheduler benchmark: regret vs budget, wall-clock, PCG, batching.
+
+Four sections, all written to ``BENCH_automl.json``:
+
+* ``schedulers`` — every scheduler (SH with LKGP-ranked promotion, SH with
+  the classic rank-based baseline, Hyperband, freeze-thaw) raced on a grid
+  of synthetic task suites from :mod:`repro.data.curves` (varying n, m,
+  observation-noise regime, divergent-curve fraction). Each pool contains a
+  few configs pre-trained to completion ("history" from earlier
+  experiments): the LKGP transfers from those completed curves through the
+  config kernel, the rank baseline cannot — that asymmetry is the paper
+  follow-up's (arXiv:2508.14818) central claim. SH-lkgp and SH-rank follow
+  the identical rung schedule, so their regrets compare at exactly equal
+  epoch budget.
+* ``precond`` — CG vs pivoted-Cholesky-preconditioned CG
+  (``LKGPConfig.precond_rank``) on the posterior solve: iterations, wall
+  time, and solution agreement per problem size.
+* ``batched`` — the vmapped ``fit_batch`` + ``posterior_batch`` path (one
+  compiled call for a whole task suite) against the per-task loop.
+* ``acceptance`` — the two headline claims as booleans so CI can gate on
+  them: SH-lkgp beats SH-rank at equal budget, and ``precond_rank > 0``
+  reduces CG iterations on at least one size.
+
+    PYTHONPATH=src python benchmarks/bench_automl.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.autotune import (AutotuneConfig, FreezeThawScheduler,
+                            HyperbandScheduler, SHConfig,
+                            SuccessiveHalvingScheduler)
+from repro.core import (LKGPConfig, cg_solve, fit, fit_batch, get_engine,
+                        gram_matrices, init_params, pcg_solve,
+                        pivoted_cholesky_grid, posterior, posterior_batch,
+                        woodbury_preconditioner)
+from repro.data import noisy_step_fns, sample_suite, sample_task, stack_suite
+
+
+# --------------------------------------------------------------------------
+# scheduler section
+# --------------------------------------------------------------------------
+def _regret_trajectory(rungs, true_final, best):
+    """Anytime regret: incumbent (best-scored active) after each rung."""
+    out = []
+    for rung in rungs:
+        act = rung["active"]
+        inc = act[int(np.argmax(rung["scores"]))]
+        out.append([int(rung["epochs_spent"]),
+                    round(float(best - true_final[inc]), 5)])
+    return out
+
+
+def run_suite(suite: dict, seeds, gp: LKGPConfig, out=print):
+    rows = []
+    n, m = suite["n"], suite["m"]
+    for seed in seeds:
+        task = sample_task(seed=suite["task_seed"] + seed, n=n, m=m,
+                           d=suite["d"], noise=0.005,
+                           diverge_prob=suite["diverge_prob"],
+                           spike_prob=0.0, crossing=True)
+        rng = np.random.default_rng(seed)
+        hist = rng.choice(n, suite["n_hist"], replace=False)
+        fresh = np.setdiff1d(np.arange(n), hist).tolist()
+        true_final = task.Y_full[:, -1]
+        best = float(true_final[fresh].max())
+
+        def race(name, make_sched, select_key="selected"):
+            sched, run_kwargs = make_sched()
+            if hasattr(sched, "pool"):          # history: free completed curves
+                for i in hist:
+                    sched.pool.advance_to(i, m, charge=False)
+            t0 = time.time()
+            summary = sched.run(**run_kwargs)
+            wall = time.time() - t0
+            if select_key == "survivors":       # freeze-thaw keeps a set
+                surv = [i for i in summary["survivors"] if i in fresh]
+                pred = summary.get("predicted_final")
+                if surv and pred is not None:
+                    sel = surv[int(np.argmax([pred[i] for i in surv]))]
+                else:
+                    sel = surv[0] if surv else fresh[0]
+            else:
+                sel = summary["selected"]
+            row = {
+                "suite": suite["name"], "scheduler": name, "seed": seed,
+                "n": n, "m": m, "n_hist": suite["n_hist"],
+                "obs_noise": suite["obs_noise"],
+                "diverge_prob": suite["diverge_prob"],
+                "epochs_spent": int(summary["epochs_spent"]),
+                "regret": round(float(best - true_final[sel]), 5),
+                "wall_s": round(wall, 3),
+            }
+            if "rungs" in summary:
+                row["regret_vs_budget"] = _regret_trajectory(
+                    summary["rungs"], true_final, best)
+            rows.append(row)
+            out(f"{suite['name']},{name},{seed},{row['epochs_spent']},"
+                f"{row['regret']},{row['wall_s']}")
+
+        sh_cfg = dict(max_epochs=m, min_epochs=suite["min_epochs"],
+                      eta=3, gp=gp, ucb_beta=0.0, refit_lbfgs_iters=8)
+
+        def sh(promotion):
+            def make():
+                sched = SuccessiveHalvingScheduler(
+                    task.X,
+                    noisy_step_fns(task, 7000 + seed, suite["obs_noise"],
+                                   suite["spike_prob"]),
+                    SHConfig(promotion=promotion, **sh_cfg), seed=seed)
+                return sched, {"subset": fresh}
+            return make
+
+        race("sh-lkgp", sh("lkgp"))
+        race("sh-rank", sh("rank"))
+
+        def hb():
+            sched = HyperbandScheduler(
+                task.X,
+                noisy_step_fns(task, 7000 + seed, suite["obs_noise"],
+                               suite["spike_prob"]),
+                SHConfig(promotion="lkgp", **sh_cfg), seed=seed,
+                candidates=fresh)
+            return sched, {}
+
+        race("hyperband-lkgp", hb)
+
+        def ft():
+            sched = FreezeThawScheduler(
+                task.X,
+                noisy_step_fns(task, 7000 + seed, suite["obs_noise"],
+                               suite["spike_prob"]),
+                AutotuneConfig(max_epochs=m, refit_every=max(2, m // 4),
+                               min_epochs_before_stop=suite["min_epochs"],
+                               ucb_beta=1.0, gp=gp, refit_lbfgs_iters=8),
+                seed=seed)
+            return sched, {}
+
+        race("freeze-thaw", ft, select_key="survivors")
+    return rows
+
+
+# --------------------------------------------------------------------------
+# preconditioner section
+# --------------------------------------------------------------------------
+def _timed(fn, reps=3):
+    """Median wall ms over ``reps`` calls after one warm-up (compile) call."""
+    out = fn()
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.time()
+        out = fn()
+        jax.block_until_ready(out)
+        times.append((time.time() - t0) * 1e3)
+    return out, float(np.median(times))
+
+
+def bench_precond(sizes, ranks=(20, 50), tol=1e-6, out=print):
+    rows = []
+    for n, m in sizes:
+        task = sample_task(seed=1, n=n, m=m, d=7)
+        X = jnp.asarray(task.X)
+        params = init_params(X.shape[1], X.dtype)
+        K1, K2 = gram_matrices(params, X, jnp.asarray(task.t, X.dtype))
+        mask = jnp.asarray(task.mask, X.dtype)
+        noise = jnp.exp(params.raw_noise)
+        engine = get_engine("iterative")
+        A = engine.operator_from_grams(K1, K2, mask, noise)
+        b = jnp.asarray(task.Y * task.mask, X.dtype)
+
+        base = cg_solve(A, b, tol=tol, max_iters=10_000)
+        _, base_ms = _timed(
+            jax.jit(lambda: cg_solve(A, b, tol=tol, max_iters=10_000).x))
+        row = {"n": n, "m": m, "n_obs": int(np.sum(task.mask)),
+               "cg_iters": int(base.iters), "cg_ms": round(base_ms, 2)}
+
+        def A_flat(u):
+            return A(u.reshape(*u.shape[:-1], n, m)).reshape(u.shape)
+
+        for rank in ranks:
+            L = pivoted_cholesky_grid(K1, K2, mask, rank)
+            M_inv = woodbury_preconditioner(L, noise)
+            res = pcg_solve(A_flat, b.reshape(-1), M_inv, tol=tol,
+                            max_iters=10_000)
+            # steady-state solve cost, factor included (it is rebuilt per
+            # refit but shared across the solves inside one)
+            _, pcg_ms = _timed(jax.jit(
+                lambda: pcg_solve(
+                    A_flat, b.reshape(-1),
+                    woodbury_preconditioner(
+                        pivoted_cholesky_grid(K1, K2, mask, rank), noise),
+                    tol=tol, max_iters=10_000).x))
+            err = float(jnp.max(jnp.abs(res.x.reshape(n, m) - base.x)))
+            row[f"pcg_r{rank}_iters"] = int(res.iters)
+            row[f"pcg_r{rank}_ms"] = round(pcg_ms, 2)
+            row[f"pcg_r{rank}_max_err"] = err
+        rows.append(row)
+        out(f"precond,{n}x{m},cg_iters={row['cg_iters']},cg_ms={row['cg_ms']},"
+            + ",".join(f"r{r}_iters={row[f'pcg_r{r}_iters']},"
+                       f"r{r}_ms={row[f'pcg_r{r}_ms']}" for r in ranks))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# batched-task section
+# --------------------------------------------------------------------------
+def bench_batched(num_tasks, n, m, d=5, out=print):
+    tasks = sample_suite(seed=11, num_tasks=num_tasks, n=n, m=m, d=d)
+    X, t, Y, mask, Y_full = stack_suite(tasks)
+    cfg = LKGPConfig(lbfgs_iters=15, mll_method="cholesky")
+
+    t0 = time.time()
+    state = fit_batch(X, t, Y, mask, cfg)
+    mean_b, var_b = posterior_batch(state).final()
+    jax.block_until_ready(mean_b)
+    batch_s = time.time() - t0
+
+    t0 = time.time()
+    means_loop = []
+    for tk in tasks:
+        st = fit(tk.X, tk.t, tk.Y, tk.mask, cfg)
+        mu, _ = posterior(st).final()
+        means_loop.append(np.asarray(mu))
+    loop_s = time.time() - t0
+
+    rmse_b = float(np.sqrt(np.mean((np.asarray(mean_b) - Y_full[:, :, -1]) ** 2)))
+    rmse_l = float(np.sqrt(np.mean((np.stack(means_loop) - Y_full[:, :, -1]) ** 2)))
+    row = {"num_tasks": num_tasks, "n": n, "m": m,
+           "batch_s": round(batch_s, 3), "loop_s": round(loop_s, 3),
+           "speedup": round(loop_s / batch_s, 2),
+           "final_rmse_batched": round(rmse_b, 5),
+           "final_rmse_loop": round(rmse_l, 5)}
+    out(f"batched,B={num_tasks},n={n},m={m},batch_s={row['batch_s']},"
+        f"loop_s={row['loop_s']},speedup={row['speedup']}x")
+    return row
+
+
+# --------------------------------------------------------------------------
+# main
+# --------------------------------------------------------------------------
+def suites_grid(quick: bool):
+    base = dict(d=5, obs_noise=0.02, spike_prob=0.03, diverge_prob=0.0,
+                min_epochs=3, task_seed=500)
+    if quick:
+        return [
+            dict(base, name="smoke-crossing", n=12, m=9, n_hist=3,
+                 min_epochs=1),
+        ]
+    return [
+        dict(base, name="small-crossing", n=16, m=12, n_hist=4, min_epochs=2),
+        dict(base, name="mid-crossing", n=24, m=20, n_hist=6),
+        dict(base, name="mid-divergent", n=24, m=20, n_hist=6,
+             diverge_prob=0.1),
+        dict(base, name="mid-noisy", n=24, m=20, n_hist=6, obs_noise=0.05,
+             spike_prob=0.06),
+    ]
+
+
+def main(quick: bool = False, seeds=None, out_path: str = "BENCH_automl.json",
+         out=print):
+    gp = LKGPConfig(lbfgs_iters=20, posterior_samples=64, slq_probes=8,
+                    slq_iters=15)
+    if seeds is None:
+        seeds = range(2) if quick else range(4)
+    seeds = list(seeds)
+
+    out("# bench_automl: scheduler regret/budget, PCG, batched harness")
+    out("suite,scheduler,seed,epochs_spent,regret,wall_s")
+    sched_rows = []
+    for suite in suites_grid(quick):
+        sched_rows += run_suite(suite, seeds, gp, out=out)
+
+    precond_rows = bench_precond(
+        sizes=((24, 16),) if quick else ((32, 24), (64, 32)),
+        ranks=(10,) if quick else (20, 50), out=out)
+
+    batched_row = bench_batched(num_tasks=4 if quick else 8,
+                                n=6 if quick else 8,
+                                m=8 if quick else 10, out=out)
+
+    # headline aggregates + acceptance
+    def agg(name):
+        rs = [r["regret"] for r in sched_rows if r["scheduler"] == name]
+        return round(float(np.mean(rs)), 5) if rs else None
+
+    budgets_equal = all(
+        a["epochs_spent"] == b["epochs_spent"]
+        for a in sched_rows if a["scheduler"] == "sh-lkgp"
+        for b in sched_rows if b["scheduler"] == "sh-rank"
+        and (b["suite"], b["seed"]) == (a["suite"], a["seed"]))
+    mean_regret = {s: agg(s) for s in
+                   ("sh-lkgp", "sh-rank", "hyperband-lkgp", "freeze-thaw")}
+    precond_ok = any(
+        row[k] < row["cg_iters"]
+        for row in precond_rows for k in row if k.endswith("_iters")
+        and k != "cg_iters")
+    acceptance = {
+        "sh_budgets_equal": bool(budgets_equal),
+        "sh_lkgp_beats_rank": bool(budgets_equal
+                                   and mean_regret["sh-lkgp"] is not None
+                                   and mean_regret["sh-lkgp"]
+                                   < mean_regret["sh-rank"]),
+        "precond_reduces_cg_iters": bool(precond_ok),
+    }
+    out(f"# mean regret: {mean_regret}")
+    out(f"# acceptance: {acceptance}")
+
+    payload = {
+        "meta": {
+            "jax_backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "platform": platform.platform(),
+            "quick": quick, "seeds": seeds,
+            "gp": {"lbfgs_iters": gp.lbfgs_iters,
+                   "posterior_samples": gp.posterior_samples},
+        },
+        "schedulers": sched_rows,
+        "mean_regret": mean_regret,
+        "precond": precond_rows,
+        "batched": batched_row,
+        "acceptance": acceptance,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    out(f"# wrote {out_path}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke sizes for the CI gate")
+    ap.add_argument("--out", default="BENCH_automl.json")
+    args = ap.parse_args()
+    main(quick=args.quick, out_path=args.out)

@@ -1,8 +1,10 @@
-"""MVM microbenchmark (§2): latent-Kronecker MVM vs dense joint MVM.
+"""MVM microbenchmark (§2): engine operators vs dense joint MVM.
 
-Demonstrates the core complexity claim on CPU wall-time: the structured MVM
-is O(n^2 m + n m^2) with O(nm) memory; the dense joint matvec is O(n^2 m^2)
-with O(n^2 m^2) memory. Also times the Pallas kernel in interpret mode purely
+Times the latent-Kronecker operator of each registered iterative-family
+engine (built via ``engine.operator_from_grams``, the same construction the
+solvers use) against the dense joint matvec: the structured MVM is
+O(n^2 m + n m^2) with O(nm) memory; the dense one is O(n^2 m^2) with
+O(n^2 m^2) memory. The Pallas engine runs in interpret mode off-TPU, purely
 as a correctness path (interpret timings are not meaningful for TPU perf —
 see EXPERIMENTS.md §Roofline for the kernel's compiled analysis).
 """
@@ -14,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gram_matrices, init_params, kron_dense, lk_mvm
+from repro.core import get_engine, gram_matrices, init_params, kron_dense
 
 
 def _time(fn, *args, reps=5):
@@ -26,9 +28,9 @@ def _time(fn, *args, reps=5):
     return (time.time() - t0) / reps * 1e6  # us
 
 
-def main(sizes=(32, 64, 128, 256), out=print):
-    out("# bench_mvm: structured vs dense joint MVM (f32, CPU wall time)")
-    out("n=m,structured_us,dense_us,speedup")
+def main(sizes=(32, 64, 128, 256), pallas_max_n: int = 64, out=print):
+    out("# bench_mvm: engine operator MVM vs dense joint (f32, CPU wall time)")
+    out("n=m,iterative_us,pallas_us,dense_us,speedup_vs_dense")
     rows = []
     for n in sizes:
         m = n
@@ -39,9 +41,17 @@ def main(sizes=(32, 64, 128, 256), out=print):
         K1, K2 = gram_matrices(params, X, t)
         mask = jnp.ones((n, m), jnp.float32)
         v = jax.random.normal(key, (n, m), jnp.float32)
+        noise = jnp.float32(0.1)
 
-        f_struct = jax.jit(lambda a, b, mk, u: lk_mvm(a, b, mk, u, 0.1))
-        us_struct = _time(f_struct, K1, K2, mask, v)
+        def op_time(backend):
+            A = get_engine(backend).operator_from_grams(K1, K2, mask, noise)
+            return _time(jax.jit(A), v)
+
+        us_iter = op_time("iterative")
+        # interpret-mode Pallas is slow on CPU; cap its sweep off-TPU
+        run_pallas = jax.default_backend() == "tpu" or n <= pallas_max_n
+        us_pal = op_time("pallas") if run_pallas else None
+        pal_s = f"{us_pal:.0f}" if us_pal is not None else "skipped"
 
         if n <= 128:
             Kd = kron_dense(K1, K2)
@@ -49,11 +59,11 @@ def main(sizes=(32, 64, 128, 256), out=print):
                 lambda Kd, u: (Kd @ u.reshape(-1)).reshape(u.shape)
                 + 0.1 * u)
             us_dense = _time(f_dense, Kd, v)
-            out(f"{n},{us_struct:.0f},{us_dense:.0f},"
-                f"{us_dense/us_struct:.1f}x")
+            out(f"{n},{us_iter:.0f},{pal_s},{us_dense:.0f},"
+                f"{us_dense/us_iter:.1f}x")
         else:
-            out(f"{n},{us_struct:.0f},OOM-skipped,")
-        rows.append((n, us_struct))
+            out(f"{n},{us_iter:.0f},{pal_s},OOM-skipped,")
+        rows.append((n, us_iter))
     return rows
 
 

@@ -25,7 +25,7 @@ jax.config.update("jax_enable_x64", True)
 import jax.numpy as jnp
 import psutil
 
-from repro.core import LKGP, LKGPConfig
+from repro.core import LKGPConfig, fit, posterior
 
 
 class PeakRSS:
@@ -65,21 +65,20 @@ def _task(n, m, d=10, seed=0):
     return X, t, Y, mask
 
 
-def run_one(method: str, n: int, m: int, n_test: int = 64,
+def run_one(backend: str, n: int, m: int, n_test: int = 64,
             lbfgs_iters: int = 5):
     X, t, Y, mask = _task(n, m)
-    cfg = LKGPConfig(mll_method=method, lbfgs_iters=lbfgs_iters,
+    cfg = LKGPConfig(backend=backend, lbfgs_iters=lbfgs_iters,
                      posterior_samples=8, cg_tol=0.01, slq_probes=8,
                      slq_iters=15, seed=0)
-    model = LKGP(cfg)
     with PeakRSS() as mem_fit:
         t0 = time.time()
-        model.fit(X, t + 1.0, Y, mask)
+        state = fit(X, t + 1.0, Y, mask, cfg)
         fit_s = time.time() - t0
     Xs = np.random.default_rng(1).uniform(0, 1, (n_test, X.shape[1]))
     with PeakRSS() as mem_pred:
         t0 = time.time()
-        s = model.posterior_samples(jax.random.PRNGKey(0), Xs=Xs, n_samples=8)
+        s = posterior(state, Xs=Xs).samples(jax.random.PRNGKey(0), 8)
         jax.block_until_ready(s)
         pred_s = time.time() - t0
     return fit_s, pred_s, mem_fit.delta_mb, mem_pred.delta_mb
@@ -87,26 +86,26 @@ def run_one(method: str, n: int, m: int, n_test: int = 64,
 
 def main(sizes=(16, 32, 64), cholesky_max: int = 32, out=print):
     out("# bench_scaling (Fig 3): train/predict time and memory vs n=m")
-    out("method,n=m,fit_s,predict_s,fit_peak_mb,predict_peak_mb")
+    out("backend,n=m,fit_s,predict_s,fit_peak_mb,predict_peak_mb")
     rows = []
     for n in sizes:
-        for method in ("iterative", "cholesky"):
-            if method == "cholesky" and n > cholesky_max:
-                out(f"cholesky,{n},SKIPPED (O(n^3 m^3) infeasible),,,")
+        for backend in ("iterative", "dense"):
+            if backend == "dense" and n > cholesky_max:
+                out(f"dense,{n},SKIPPED (O(n^3 m^3) infeasible),,,")
                 continue
-            f, p, mf, mp = run_one(method, n, n)
-            rows.append((method, n, f, p, mf, mp))
-            out(f"{method},{n},{f:.2f},{p:.2f},{mf:.0f},{mp:.0f}")
-    # derived claim: iterative scales better than cholesky
+            f, p, mf, mp = run_one(backend, n, n)
+            rows.append((backend, n, f, p, mf, mp))
+            out(f"{backend},{n},{f:.2f},{p:.2f},{mf:.0f},{mp:.0f}")
+    # derived claim: iterative scales better than dense Cholesky
     it = {r[1]: r[2] for r in rows if r[0] == "iterative"}
-    ch = {r[1]: r[2] for r in rows if r[0] == "cholesky"}
+    ch = {r[1]: r[2] for r in rows if r[0] == "dense"}
     shared = sorted(set(it) & set(ch))
     if len(shared) >= 2:
         lo, hi = shared[0], shared[-1]
         growth_it = it[hi] / max(it[lo], 1e-9)
         growth_ch = ch[hi] / max(ch[lo], 1e-9)
         out(f"# growth {lo}->{hi}: iterative x{growth_it:.1f}, "
-            f"cholesky x{growth_ch:.1f} (paper: LKGP scales far better)")
+            f"dense x{growth_ch:.1f} (paper: LKGP scales far better)")
     return rows
 
 

@@ -1,0 +1,119 @@
+"""Benchmark-regression gate: compare smoke runs against a committed baseline.
+
+    python benchmarks/check_regression.py \
+        --baseline BENCH_baseline.json \
+        --backends BENCH_backends.ci.json \
+        --automl BENCH_automl.ci.json \
+        --factor 2.0
+
+Fails (exit 1) when
+
+* any backend's ``mll_eval_ms`` / ``posterior_mean_ms`` at a matching
+  (backend, n, m) cell regresses more than ``--factor`` against the
+  committed ``BENCH_baseline.json``, or
+* either headline acceptance claim measured by ``bench_automl`` is false
+  (LKGP-ranked SH beats rank-based at equal budget; ``precond_rank > 0``
+  reduces CG iterations).
+
+The committed baseline was measured on a different machine than the CI
+runner, so raw wall times are not comparable. Timings are therefore
+normalised by a per-run machine-speed reference — the dense backend's
+``mll_eval_ms`` at the first shared cell — before the factor check: a
+uniformly slower runner cancels out, while one backend regressing
+relative to the others does not. The reference cell itself is reported as
+information only.
+
+Wall-clock deltas of the AutoML schedulers are likewise informational —
+scheduler timing includes many small L-BFGS refits and is too noisy on
+shared CI runners for a hard gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _backend_cells(payload):
+    return {(r["backend"], r["n"], r["m"]): r for r in payload["results"]}
+
+
+def _speed_reference(cells):
+    """Machine-speed proxy: dense mll_eval_ms at the smallest shared cell."""
+    dense = sorted(k for k in cells if k[0] == "dense")
+    if not dense:     # dense skipped (huge smoke size) — first cell instead
+        dense = sorted(cells)
+    key = dense[0]
+    return key, cells[key]["mll_eval_ms"]
+
+
+def check(baseline: dict, backends: dict, automl: dict,
+          factor: float) -> list[str]:
+    failures = []
+
+    base_cells = _backend_cells(baseline["backends"])
+    cur_cells = _backend_cells(backends)
+    ref_key, base_ref = _speed_reference(base_cells)
+    if ref_key not in cur_cells:
+        return [f"backends: reference cell {ref_key} missing from current run"]
+    cur_ref = cur_cells[ref_key]["mll_eval_ms"]
+    speed = cur_ref / base_ref if base_ref > 0 else 1.0
+    print(f"info      machine-speed reference {ref_key}: current "
+          f"{cur_ref:.2f}ms / baseline {base_ref:.2f}ms = {speed:.2f}x")
+
+    for key, base_row in base_cells.items():
+        cur_row = cur_cells.get(key)
+        if cur_row is None:
+            failures.append(f"backends: cell {key} missing from current run")
+            continue
+        for metric in ("mll_eval_ms", "posterior_mean_ms"):
+            if (key, metric) == (ref_key, "mll_eval_ms"):
+                continue                       # the reference itself
+            base_v, cur_v = base_row[metric], cur_row[metric]
+            ratio = (cur_v / (base_v * speed)) if base_v > 0 else float("inf")
+            line = (f"backends {key} {metric}: {cur_v:.2f}ms vs "
+                    f"baseline {base_v:.2f}ms (normalised {ratio:.2f}x)")
+            if ratio > factor:
+                failures.append("REGRESSION " + line)
+            else:
+                print("ok        " + line)
+
+    for claim, value in automl["acceptance"].items():
+        if value:
+            print(f"ok        automl acceptance: {claim}")
+        else:
+            failures.append(f"CLAIM FAILED automl acceptance: {claim}")
+
+    base_sched = baseline.get("automl", {}).get("mean_regret", {})
+    for sched, regret in automl.get("mean_regret", {}).items():
+        base_r = base_sched.get(sched)
+        print(f"info      automl {sched}: mean regret {regret}"
+              + (f" (baseline {base_r})" if base_r is not None else ""))
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--backends", default="BENCH_backends.ci.json")
+    ap.add_argument("--automl", default="BENCH_automl.ci.json")
+    ap.add_argument("--factor", type=float, default=2.0)
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.backends) as f:
+        backends = json.load(f)
+    with open(args.automl) as f:
+        automl = json.load(f)
+
+    failures = check(baseline, backends, automl, args.factor)
+    if failures:
+        print("\n".join(["", "benchmark gate FAILED:"] + failures))
+        return 1
+    print("benchmark gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

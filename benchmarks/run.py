@@ -15,7 +15,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes / fewer seeds")
     ap.add_argument("--only", default="",
-                    help="comma list: scaling,prediction,mvm,roofline")
+                    help="comma list: scaling,prediction,mvm,automl,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -48,6 +48,18 @@ def main() -> None:
         budget = 120
         print(f"bench_prediction,{(time.time()-t0)*1e6:.0f},"
               f"lkgp_mse_b{budget}={res[('LKGP', budget)][0]:.5f}")
+
+    if only is None or "automl" in only:
+        from . import bench_automl
+        t0 = time.time()
+        payload = bench_automl.main(
+            quick=args.quick,
+            out_path="BENCH_automl.quick.json" if args.quick
+            else "BENCH_automl.json")
+        acc = payload["acceptance"]
+        print(f"bench_automl,{(time.time()-t0)*1e6:.0f},"
+              f"sh_lkgp_beats_rank={acc['sh_lkgp_beats_rank']},"
+              f"precond_reduces_cg_iters={acc['precond_reduces_cg_iters']}")
 
     if (only is None and not args.quick) or (only and "ablation" in only):
         from .bench_prediction import ablate_t_kernel

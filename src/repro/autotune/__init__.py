@@ -1,2 +1,22 @@
-"""LKGP-driven early-stopping (freeze-thaw) scheduler."""
+"""AutoML scheduler subsystem driven by LKGP learning-curve prediction.
+
+Layered as predictor -> schedulers:
+
+* :mod:`~repro.autotune.predictor` — the shared :class:`CurvePredictor`
+  (extend → warm refit → ``Posterior.final``) and the :class:`RunPool`
+  execution harness;
+* :mod:`~repro.autotune.scheduler` — :class:`FreezeThawScheduler`
+  (confidence-based early stopping, no fixed kill schedule);
+* :mod:`~repro.autotune.sh` — :class:`SuccessiveHalvingScheduler` and
+  :class:`HyperbandScheduler` (rung-based promotion, LKGP-ranked or
+  classic rank-based).
+"""
+from .predictor import CurvePredictor, RunPool
 from .scheduler import AutotuneConfig, FreezeThawScheduler
+from .sh import HyperbandScheduler, SHConfig, SuccessiveHalvingScheduler
+
+__all__ = [
+    "CurvePredictor", "RunPool",
+    "AutotuneConfig", "FreezeThawScheduler",
+    "SHConfig", "SuccessiveHalvingScheduler", "HyperbandScheduler",
+]

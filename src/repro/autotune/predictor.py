@@ -1,0 +1,185 @@
+"""Shared LKGP curve-prediction layer for every AutoML scheduler.
+
+All schedulers (freeze-thaw, Successive Halving, Hyperband) need the same
+model loop over a pool of partially observed learning curves:
+
+  1. fold new observations into the state — cold :func:`~repro.core.fit`
+     on first contact, :func:`~repro.core.extend` afterwards (incremental
+     conditioning, hyper-parameters carried over as a warm start);
+  2. re-optimise hyper-parameters with a warm-started, budget-capped
+     :func:`~repro.core.refit`;
+  3. read each config's predicted final-epoch metric from
+     ``Posterior.final`` (exact mean from the cached CG solve + Matheron
+     variance).
+
+:class:`CurvePredictor` owns that loop so scheduler classes only contain
+promotion/stopping policy. Predictions live in *score space* (metrics are
+multiplied by ±1 so that larger is always better); ``to_raw`` undoes the
+sign for reporting.
+
+:class:`RunPool` is the matching execution-side helper: it drives the
+user-supplied ``step_fns`` (one "advance one epoch -> metric" callable per
+config), records curves/masks, and enforces a total epoch budget.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import numpy as np
+
+from ..core import LKGPConfig, LKGPState, extend, fit, posterior, refit
+
+__all__ = ["CurvePredictor", "RunPool"]
+
+
+def _norm_ppf(q: float) -> float:
+    """Standard-normal quantile."""
+    from scipy.stats import norm
+
+    return float(norm.ppf(q))
+
+
+class CurvePredictor:
+    """LKGP over a fixed pool of configs: extend → warm refit → final mean/std.
+
+    Parameters
+    ----------
+    X : (n, d) hyper-parameter configurations (the whole pool).
+    max_epochs : grid length m; progressions are epochs ``1..m``.
+    gp : model/inference config for the cold fit (``precond_rank`` et al.
+        flow straight through to the engines).
+    maximize : if False the metric is negated internally so score space is
+        always "larger is better".
+    refit_lbfgs_iters : L-BFGS budget for warm-started refits
+        (None -> ``gp.lbfgs_iters``).
+    """
+
+    def __init__(self, X, max_epochs: int, gp: LKGPConfig | None = None,
+                 maximize: bool = True, refit_lbfgs_iters: int | None = None,
+                 seed: int = 0):
+        self.X = np.asarray(X, np.float64)
+        self.t = np.arange(1.0, max_epochs + 1.0)
+        self.gp = gp if gp is not None else LKGPConfig(lbfgs_iters=30)
+        self.sign = 1.0 if maximize else -1.0
+        self.refit_lbfgs_iters = refit_lbfgs_iters
+        self.seed = seed
+        self.state: LKGPState | None = None
+        self.n_refits = 0
+        self._final_cache: tuple | None = None   # (n_refits, mean, std)
+
+    def update(self, Y, mask) -> None:
+        """Fold the pool's current (n, m) curves in and re-optimise.
+
+        ``mask`` must grow monotonically between calls (``extend`` enforces
+        it) — schedulers only ever add observations.
+        """
+        Y = self.sign * np.asarray(Y, np.float64)
+        mask = np.asarray(mask, np.float64)
+        if self.state is None:
+            self.state = fit(self.X, self.t, Y, mask, self.gp)
+        else:
+            self.state = extend(self.state, Y, mask)
+            self.state = refit(self.state,
+                               lbfgs_iters=self.refit_lbfgs_iters)
+        self.n_refits += 1
+
+    def predict_final(self, key=None):
+        """(mean, std) of each config's final-epoch metric in score space.
+
+        Default-key calls are cached per refit, so a scheduler reading the
+        same prediction twice (rung scoring, then the run summary) pays for
+        one posterior pass.
+        """
+        if self.state is None:
+            raise RuntimeError("predict_final before any update()")
+        default_key = key is None
+        if default_key:
+            if self._final_cache is not None \
+                    and self._final_cache[0] == self.n_refits:
+                return self._final_cache[1], self._final_cache[2]
+            key = jax.random.PRNGKey(self.seed + self.n_refits)
+        mean, var = posterior(self.state).final(key=key)
+        mean = np.asarray(mean)
+        std = np.sqrt(np.maximum(np.asarray(var), 0.0))
+        if default_key:
+            self._final_cache = (self.n_refits, mean, std)
+        return mean, std
+
+    def scores(self, rule: str = "ucb", ucb_beta: float = 1.0,
+               quantile: float = 0.75, key=None) -> np.ndarray:
+        """Per-config promotion scores (score space, larger = better).
+
+        ``"ucb"``: mean + beta * std — optimistic, keeps configs whose
+        upside is still plausible. ``"quantile"``: the q-quantile of the
+        predictive final-value distribution (q < 0.5 is conservative,
+        q > 0.5 optimistic).
+        """
+        mean, std = self.predict_final(key=key)
+        if rule == "ucb":
+            return mean + ucb_beta * std
+        if rule == "quantile":
+            return mean + _norm_ppf(quantile) * std
+        raise ValueError(f"unknown promotion rule {rule!r}; "
+                         "expected 'ucb' or 'quantile'")
+
+    def to_raw(self, scores: np.ndarray) -> np.ndarray:
+        """Map score-space values back to raw metric units."""
+        return self.sign * np.asarray(scores)
+
+
+class RunPool:
+    """Execution state over a pool of runs: curves, masks, epoch accounting.
+
+    ``step_fns[i]() -> float`` advances run i by one epoch and returns the
+    metric. The pool never re-runs an epoch: ``advance_to`` is a no-op for
+    configs already at (or past) the target, which lets Hyperband brackets
+    share one pool without double-charging epochs.
+    """
+
+    def __init__(self, step_fns: list[Callable[[], float]], max_epochs: int,
+                 budget: int | None = None):
+        n = len(step_fns)
+        self.step_fns = step_fns
+        self.max_epochs = max_epochs
+        self.Y = np.zeros((n, max_epochs))
+        self.mask = np.zeros((n, max_epochs))
+        self.epochs_done = np.zeros(n, np.int64)
+        self.spent = 0
+        self.budget = budget
+
+    @property
+    def n(self) -> int:
+        return len(self.step_fns)
+
+    def exhausted(self) -> bool:
+        return self.budget is not None and self.spent >= self.budget
+
+    def advance_to(self, i: int, target_epochs: int,
+                   charge: bool = True) -> None:
+        """Run config i until it has ``target_epochs`` epochs (budget-capped).
+
+        ``charge=False`` records the epochs without counting them against
+        ``spent`` — used to preload completed curves from *previous*
+        experiments ("history"), which every scheduler gets for free.
+        """
+        target = min(int(target_epochs), self.max_epochs)
+        while self.epochs_done[i] < target \
+                and not (charge and self.exhausted()):
+            e = int(self.epochs_done[i])
+            self.Y[i, e] = float(self.step_fns[i]())
+            self.mask[i, e] = 1.0
+            self.epochs_done[i] += 1
+            if charge:
+                self.spent += 1
+
+    def observed_last(self, i: int) -> float:
+        """Most recent observed metric of config i (nan if never run)."""
+        e = int(self.epochs_done[i])
+        return float(self.Y[i, e - 1]) if e > 0 else float("nan")
+
+    def observed_best(self, maximize: bool = True):
+        if not self.mask.any():
+            return None
+        vals = self.Y[self.mask > 0]
+        return float(np.max(vals) if maximize else np.min(vals))

@@ -2,9 +2,8 @@
 
 Freeze-thaw-style loop over a pool of training runs:
   1. every ``refit_every`` epochs, fold the new partial-curve observations
-     into the model state with ``extend`` (incremental conditioning) and
-     re-optimise hyper-parameters with ``refit``, warm-started from the
-     previous fit — no model is rebuilt from scratch;
+     into the shared :class:`~repro.autotune.predictor.CurvePredictor`
+     (``extend`` + warm-started ``refit`` — no model is rebuilt);
   2. predict each run's final-epoch metric via ``Posterior.final`` (exact
      mean from the cached CG solve + Matheron variance);
   3. stop runs whose predicted final value is below the best observed /
@@ -14,6 +13,9 @@ Freeze-thaw-style loop over a pool of training runs:
 This is the system-level answer to stragglers and wasted fleet compute: bad
 hyper-parameter configurations are detected from partial learning curves and
 preempted. Works with any trainer exposing (advance one epoch -> metric).
+Unlike :class:`~repro.autotune.sh.SuccessiveHalvingScheduler` it never
+*commits* to a kill schedule — every run survives until the model is
+confident it will lose.
 """
 from __future__ import annotations
 
@@ -23,7 +25,8 @@ from typing import Callable
 import jax
 import numpy as np
 
-from ..core import LKGPConfig, LKGPState, extend, fit, posterior, refit
+from ..core import LKGPConfig, LKGPState
+from .predictor import CurvePredictor, RunPool
 
 __all__ = ["AutotuneConfig", "FreezeThawScheduler"]
 
@@ -49,54 +52,52 @@ class FreezeThawScheduler:
         self.step_fns = step_fns
         self.cfg = cfg or AutotuneConfig()
         n, m = len(step_fns), self.cfg.max_epochs
-        self.Y = np.zeros((n, m))
-        self.mask = np.zeros((n, m))
+        self.pool = RunPool(step_fns, m)
         self.active = np.ones(n, bool)
         self.seed = seed
         self.history: list[dict] = []
-        self.state: LKGPState | None = None
+        self.predictor = CurvePredictor(
+            self.X, m, gp=self.cfg.gp, maximize=self.cfg.maximize,
+            refit_lbfgs_iters=self.cfg.refit_lbfgs_iters, seed=seed)
+
+    @property
+    def state(self) -> LKGPState | None:
+        """The predictor's fitted model state (None before the first refit)."""
+        return self.predictor.state
+
+    @property
+    def Y(self) -> np.ndarray:
+        return self.pool.Y
+
+    @property
+    def mask(self) -> np.ndarray:
+        return self.pool.mask
 
     # -- core loop -----------------------------------------------------------
     def run(self, total_epoch_budget: int | None = None) -> dict:
         cfg = self.cfg
-        n, m = self.Y.shape
-        budget = total_epoch_budget if total_epoch_budget is not None else n * m
+        n, m = self.pool.n, self.pool.max_epochs
+        self.pool.budget = (total_epoch_budget
+                            if total_epoch_budget is not None else n * m)
         epoch = 0
-        spent = 0
-        while spent < budget and self.active.any() and epoch < m:
+        while not self.pool.exhausted() and self.active.any() and epoch < m:
             for i in range(n):
-                if not self.active[i] or spent >= budget:
-                    continue
-                val = float(self.step_fns[i]())
-                self.Y[i, epoch] = val
-                self.mask[i, epoch] = 1.0
-                spent += 1
+                if self.active[i]:
+                    # no-op for configs already past this epoch (preloaded
+                    # history curves ride along for free)
+                    self.pool.advance_to(i, epoch + 1)
             if (epoch + 1) % cfg.refit_every == 0 \
                     and epoch + 1 >= cfg.min_epochs_before_stop \
                     and epoch + 1 < m:
                 self._refit_and_stop(epoch + 1)
             epoch += 1
-        return self.summary(spent)
-
-    def _sign(self) -> float:
-        return 1.0 if self.cfg.maximize else -1.0
+        return self.summary(self.pool.spent)
 
     def _refit_and_stop(self, epochs_done: int):
         cfg = self.cfg
-        t = np.arange(1.0, self.Y.shape[1] + 1.0)
-        sign = self._sign()
-        if self.state is None:
-            # Cold start: first fit of the pool's partial curves.
-            self.state = fit(self.X, t, sign * self.Y, self.mask, cfg.gp)
-        else:
-            # Incremental conditioning + warm-started hyper-parameters.
-            self.state = extend(self.state, sign * self.Y, self.mask)
-            self.state = refit(self.state,
-                               lbfgs_iters=cfg.refit_lbfgs_iters)
-        mean, var = posterior(self.state).final(
+        self.predictor.update(self.Y, self.mask)
+        mean, std = self.predictor.predict_final(
             key=jax.random.PRNGKey(self.seed + epochs_done))
-        mean = np.asarray(mean)
-        std = np.sqrt(np.maximum(np.asarray(var), 0.0))
         best = float(np.max(mean[self.active]))
         stopped = []
         for i in range(len(mean)):
@@ -110,15 +111,13 @@ class FreezeThawScheduler:
         })
 
     def summary(self, spent: int) -> dict:
-        best_fn = np.max if self.cfg.maximize else np.min
-        obs_best = float(best_fn(self.Y[self.mask > 0])) if self.mask.any() else None
-        # final prediction pass for reporting (back in raw metric units:
-        # the GP is fit on sign * Y, so undo the sign here)
+        obs_best = self.pool.observed_best(self.cfg.maximize)
+        # final prediction pass for reporting (back in raw metric units)
         pred_mean = None
-        if self.state is not None:
-            mean, _ = posterior(self.state).final(
+        if self.predictor.state is not None:
+            mean, _ = self.predictor.predict_final(
                 key=jax.random.PRNGKey(self.seed + 999))
-            pred_mean = (self._sign() * np.asarray(mean)).tolist()
+            pred_mean = self.predictor.to_raw(mean).tolist()
         return {
             "epochs_spent": spent,
             "observed_best": obs_best,

@@ -15,18 +15,22 @@ Supporting numerics: grid-form CG (:mod:`~repro.core.cg`), stochastic
 Lanczos quadrature (:mod:`~repro.core.slq`), the latent-Kronecker MVM
 (:mod:`~repro.core.mvm`), Matheron sampling, transforms, and priors.
 """
-from .cg import CGResult, cg_solve
+from .cg import CGResult, cg_solve, pcg_solve
 from .engines import (ENGINES, CustomMVMEngine, DenseEngine,
                       DistributedEngine, InferenceEngine, IterativeEngine,
-                      PallasEngine, get_engine, list_backends, make_mll,
-                      make_mll_iterative, mll_cholesky, register_engine)
+                      LatentKroneckerOperator, PallasEngine, get_engine,
+                      list_backends, make_mll, make_mll_iterative,
+                      mll_cholesky, register_engine)
 from .gp_kernels import KERNELS_1D, matern12, matern32, matern52, rbf_ard
 from .lbfgs import LBFGSResult, lbfgs_minimize
 from .lkgp import LKGP
 from .matheron import sample_posterior_grid
 from .mvm import (grid_to_packed, joint_cov_packed, kron_dense, lk_mvm,
                   lk_operator, packed_to_grid)
-from .posterior import Posterior, joint_grams, posterior
+from .posterior import (BatchedPosterior, Posterior, joint_grams, posterior,
+                        posterior_batch)
+from .precond import (pivoted_cholesky_grid, pivoted_cholesky_latent,
+                      woodbury_preconditioner)
 from .priors import noise_prior_logpdf, x_lengthscale_prior_logpdf
 from .slq import lanczos, rademacher_probes, slq_logdet
 from .state import (GPData, LKGPConfig, LKGPParams, LKGPState, extend, fit,
@@ -36,12 +40,14 @@ from .transforms import TTransform, XTransform, YTransform
 
 __all__ = [
     # solvers / numerics
-    "CGResult", "cg_solve", "KERNELS_1D", "matern12", "matern32", "matern52",
-    "rbf_ard", "LBFGSResult", "lbfgs_minimize", "sample_posterior_grid",
-    "grid_to_packed", "joint_cov_packed", "kron_dense", "lk_mvm",
-    "lk_operator", "packed_to_grid", "noise_prior_logpdf",
-    "x_lengthscale_prior_logpdf", "lanczos", "rademacher_probes",
-    "slq_logdet", "TTransform", "XTransform", "YTransform",
+    "CGResult", "cg_solve", "pcg_solve", "KERNELS_1D", "matern12", "matern32",
+    "matern52", "rbf_ard", "LBFGSResult", "lbfgs_minimize",
+    "sample_posterior_grid", "grid_to_packed", "joint_cov_packed",
+    "kron_dense", "lk_mvm", "lk_operator", "packed_to_grid",
+    "noise_prior_logpdf", "x_lengthscale_prior_logpdf", "lanczos",
+    "rademacher_probes", "slq_logdet", "TTransform", "XTransform",
+    "YTransform", "pivoted_cholesky_grid", "pivoted_cholesky_latent",
+    "woodbury_preconditioner",
     # state + functional API
     "LKGPState", "GPData", "LKGPConfig", "LKGPParams", "fit", "fit_batch",
     "extend", "refit", "unstack", "resolve_backend", "gram_matrices",
@@ -49,8 +55,9 @@ __all__ = [
     # engines
     "InferenceEngine", "ENGINES", "get_engine", "register_engine",
     "list_backends", "DenseEngine", "IterativeEngine", "PallasEngine",
-    "DistributedEngine", "CustomMVMEngine", "make_mll", "make_mll_iterative",
-    "mll_cholesky",
+    "DistributedEngine", "CustomMVMEngine", "LatentKroneckerOperator",
+    "make_mll", "make_mll_iterative", "mll_cholesky",
     # posterior + facade
     "Posterior", "posterior", "joint_grams", "LKGP",
+    "BatchedPosterior", "posterior_batch",
 ]

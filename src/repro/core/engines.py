@@ -27,22 +27,22 @@ engines use the custom-VJP quadratic-form gradient trick (Gardner et al.,
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Callable, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
-from .cg import cg_solve
-from .mvm import kron_dense, lk_mvm, lk_operator
+from .cg import cg_solve, pcg_solve
+from .mvm import kron_dense, lk_mvm
+from .precond import pivoted_cholesky_grid, woodbury_preconditioner
 from .slq import slq_logdet
 from .state import GPData, LKGPConfig, LKGPParams, gram_matrices
 
 __all__ = [
     "InferenceEngine", "ENGINES", "register_engine", "get_engine",
     "list_backends", "DenseEngine", "IterativeEngine", "PallasEngine",
-    "DistributedEngine", "CustomMVMEngine", "make_mll", "mll_cholesky",
-    "make_mll_iterative",
+    "DistributedEngine", "CustomMVMEngine", "LatentKroneckerOperator",
+    "make_mll", "mll_cholesky", "make_mll_iterative",
 ]
 
 _LOG_2PI = math.log(2.0 * math.pi)
@@ -157,6 +157,36 @@ class DenseEngine:
 # --------------------------------------------------------------------------
 # iterative (CG + SLQ)
 # --------------------------------------------------------------------------
+class LatentKroneckerOperator:
+    """Callable A(u) that remembers its Kronecker factors.
+
+    The iterative-family engines return this instead of a bare closure so
+    that ``solve`` can build the pivoted-Cholesky preconditioner from the
+    factors when ``LKGPConfig.precond_rank > 0`` — the factorisation only
+    needs K1 / K2 / mask, never the assembled operator.
+    """
+
+    def __init__(self, K1, K2, mask, noise, mvm=lk_mvm):
+        self.K1, self.K2, self.mask, self.noise = K1, K2, mask, noise
+        self._mvm = mvm
+        self._precond = None    # (rank, M_inv) cache
+
+    def __call__(self, u):
+        return self._mvm(self.K1, self.K2, self.mask, u, noise=self.noise)
+
+    def preconditioner(self, rank: int):
+        """Woodbury M^{-1} from the rank-``rank`` pivoted Cholesky, cached.
+
+        The factorisation only depends on (K1, K2, mask, noise), all fixed
+        for this operator, so repeated solves (posterior alpha + Matheron
+        samples, CG inside one MLL evaluation) share one factor.
+        """
+        if self._precond is None or self._precond[0] != rank:
+            L = pivoted_cholesky_grid(self.K1, self.K2, self.mask, rank)
+            self._precond = (rank, woodbury_preconditioner(L, self.noise))
+        return self._precond[1]
+
+
 @register_engine("iterative")
 class IterativeEngine:
     exact = False
@@ -168,14 +198,36 @@ class IterativeEngine:
                                         jnp.exp(params.raw_noise))
 
     def operator_from_grams(self, K1, K2, mask, noise):
-        return lk_operator(K1, K2, mask, noise)
+        return LatentKroneckerOperator(K1, K2, mask, noise)
 
     def solve(self, A, b, config):
+        rank = getattr(config, "precond_rank", 0)
+        if rank and isinstance(A, LatentKroneckerOperator):
+            return _precond_solve(A, b, config, rank).x
         return cg_solve(A, b, tol=config.cg_tol,
                         max_iters=config.cg_max_iters).x
 
     def logdet(self, A, data, config, probes):
         return slq_logdet(A, probes, config.slq_iters, jnp.sum(data.mask))
+
+
+def _precond_solve(A: LatentKroneckerOperator, b, config, rank: int):
+    """Preconditioned CG through the operator's Kronecker factors.
+
+    Flattens grid-form vectors (..., n, m) onto (..., n*m) packed form,
+    preconditions with the Woodbury-inverted rank-``rank`` pivoted Cholesky
+    of the masked latent covariance, and reshapes the solution back. All
+    pure jax, so it works under jit with a traced mask.
+    """
+    n, m = A.mask.shape
+    M_inv = A.preconditioner(rank)
+
+    def A_flat(u):
+        return A(u.reshape(*u.shape[:-1], n, m)).reshape(u.shape)
+
+    res = pcg_solve(A_flat, b.reshape(*b.shape[:-2], n * m), M_inv,
+                    tol=config.cg_tol, max_iters=config.cg_max_iters)
+    return res._replace(x=res.x.reshape(b.shape))
 
 
 class CustomMVMEngine(IterativeEngine):
@@ -187,7 +239,7 @@ class CustomMVMEngine(IterativeEngine):
         self._mvm = mvm
 
     def operator_from_grams(self, K1, K2, mask, noise):
-        return partial(self._mvm, K1, K2, mask, noise=noise)
+        return LatentKroneckerOperator(K1, K2, mask, noise, mvm=self._mvm)
 
 
 # --------------------------------------------------------------------------
@@ -234,10 +286,16 @@ def _pallas_mvm_bwd(res, g):
 _pallas_mvm.defvjp(_pallas_mvm_fwd, _pallas_mvm_bwd)
 
 
+def _pallas_mvm_kw(K1, K2, mask, u, noise=0.0):
+    # custom_vjp functions only take positional args; adapt to the
+    # ``mvm(K1, K2, mask, u, noise=...)`` calling convention.
+    return _pallas_mvm(K1, K2, mask, u, noise)
+
+
 @register_engine("pallas")
 class PallasEngine(IterativeEngine):
     def operator_from_grams(self, K1, K2, mask, noise):
-        return lambda u: _pallas_mvm(K1, K2, mask, u, noise)
+        return LatentKroneckerOperator(K1, K2, mask, noise, mvm=_pallas_mvm_kw)
 
 
 # --------------------------------------------------------------------------

@@ -25,9 +25,11 @@ import numpy as np
 from . import gp_kernels as gk
 from .engines import get_engine
 from .matheron import sample_posterior_grid
+from .mvm import kron_dense
 from .state import LKGPState, resolve_backend
 
-__all__ = ["Posterior", "posterior", "joint_grams"]
+__all__ = ["Posterior", "posterior", "joint_grams", "BatchedPosterior",
+           "posterior_batch"]
 
 
 def joint_grams(state: LKGPState, Xs=None):
@@ -151,3 +153,75 @@ class Posterior:
 def posterior(state: LKGPState, Xs=None, engine=None) -> Posterior:
     """Lazy posterior for a fitted state (optionally at new configs Xs)."""
     return Posterior(state, Xs=Xs, engine=engine)
+
+
+class BatchedPosterior:
+    """Vmapped exact posterior over a batch of tasks from :func:`fit_batch`.
+
+    All B tasks are processed in ONE jitted+vmapped call: exact dense
+    posterior mean over each task's grid plus the exact final-progression
+    mean/variance (no Matheron MC — the per-task problems this path targets
+    are small, so the dense O(N^3) route is both exact and fast). The
+    Gram construction matches :func:`joint_grams` (jitter on K2 only), so
+    per-task results agree with :class:`Posterior` on the same state slice.
+    """
+
+    def __init__(self, state: LKGPState):
+        if state.X.ndim != 3:
+            raise ValueError("BatchedPosterior expects a batched state from "
+                             f"fit_batch; got X of shape {state.X.shape}")
+        self._state = state
+
+    @cached_property
+    def _products(self):
+        cfg = self._state.config
+        k2fn = gk.KERNELS_1D[cfg.t_kernel]
+
+        def one(params, X, t, Y, mask, x_tf, t_tf, y_tf):
+            Xn, tn, Yn = x_tf(X), t_tf(t), y_tf(Y)
+            n, m = mask.shape
+            K2 = k2fn(tn, tn, jnp.exp(params.raw_t_lengthscale),
+                      jnp.exp(params.raw_outputscale))
+            K2 = K2 + cfg.jitter * jnp.eye(m, dtype=K2.dtype)
+            K1 = gk.rbf_ard(Xn, Xn, jnp.exp(params.raw_x_lengthscale))
+            noise = jnp.exp(params.raw_noise)
+
+            mv = mask.reshape(-1)
+            Kd = kron_dense(K1, K2) * (mv[:, None] * mv[None, :])
+            Kd = Kd + jnp.diag(noise * mv + (1.0 - mv))
+            L = jnp.linalg.cholesky(Kd)
+            ym = (Yn * mask).reshape(-1)
+            alpha = jax.scipy.linalg.cho_solve((L, True), ym) * mv
+            mean_t = jnp.einsum("ij,jm,mk->ik", K1, alpha.reshape(n, m), K2)
+
+            # Exact latent variance of each config's final-epoch value:
+            # var_i = K1[ii] K2[mm] - k_i^T A^{-1} k_i with k_i the masked
+            # joint-covariance row at cell (i, m-1).
+            Krhs = (K1[:, :, None] * K2[:, -1][None, None, :]) * mask[None]
+            Krhs = Krhs.reshape(n, n * m)
+            S = jax.scipy.linalg.cho_solve((L, True), Krhs.T)   # (N, n)
+            quad = jnp.sum(Krhs.T * S, axis=0)
+            var_f = jnp.diag(K1) * K2[-1, -1] - quad
+            var_f = jnp.maximum(var_f, 0.0)
+            return (y_tf.inverse(mean_t),
+                    y_tf.inverse_var(var_f + noise))
+
+        st = self._state
+        fn = jax.jit(jax.vmap(one))
+        return fn(st.params, st.X, st.t, st.Y, st.mask,
+                  st.x_tf, st.t_tf, st.y_tf)
+
+    @property
+    def mean(self) -> jnp.ndarray:
+        """Exact posterior means, (B, n, m), y units."""
+        return self._products[0]
+
+    def final(self):
+        """(mean, var) of the final-progression value, each (B, n)."""
+        mean, var = self._products
+        return mean[:, :, -1], var
+
+
+def posterior_batch(state: LKGPState) -> BatchedPosterior:
+    """Batched exact posterior for a :func:`fit_batch` state."""
+    return BatchedPosterior(state)

@@ -11,16 +11,24 @@ woodbury-inverted (L_r L_r^T + sigma^2 I)^{-1} applied in O(N r) per CG
 iteration — provably reducing the condition number to that of the residual
 spectrum (Gardner et al. 2018).
 
-Operates on packed (observed-only) vectors; `lkgp` wires it into CG via the
-grid<->packed helpers when ``LKGPConfig.precond_rank > 0``.
+Two factorisation entry points:
+
+* :func:`pivoted_cholesky_latent` — host-side numpy over *packed* observed
+  entries (needs a concrete mask; reference / offline use).
+* :func:`pivoted_cholesky_grid` — pure-jax over flattened *grid* cells
+  (unobserved cells carry a zero diagonal and are never pivoted), jittable
+  with a traced mask; this is what the iterative/pallas engines use when
+  ``LKGPConfig.precond_rank > 0``.
 """
 from __future__ import annotations
 
 import numpy as np
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["pivoted_cholesky_latent", "woodbury_preconditioner"]
+__all__ = ["pivoted_cholesky_latent", "pivoted_cholesky_grid",
+           "woodbury_preconditioner"]
 
 
 def pivoted_cholesky_latent(K1, K2, mask, rank: int, jitter: float = 1e-12):
@@ -62,6 +70,52 @@ def pivoted_cholesky_latent(K1, K2, mask, rank: int, jitter: float = 1e-12):
     return jnp.asarray(L)
 
 
+def pivoted_cholesky_grid(K1, K2, mask, rank: int, jitter: float = 1e-12):
+    """Rank-``rank`` pivoted Cholesky of the masked latent covariance, jittable.
+
+    Works on the flattened (n*m,) grid: the diagonal of the masked joint
+    covariance is ``mask * diag(K1) ⊗ diag(K2)``, so unobserved cells carry a
+    zero diagonal, are never selected as pivots, and end up with all-zero rows
+    in L — exactly the projected operator the CG solve sees. Each pivot's
+    covariance row is formed lazily from the Kronecker factors
+    (``mask ⊙ K1[:, j1] K2[:, j2]^T``), O(nm) per step, O(nm r^2) total.
+
+    Returns L of shape (n*m, rank). Pure jax (lax.fori_loop + dynamic
+    argmax pivoting), so it can live inside the jitted MLL objective where
+    the mask is a tracer. If the residual diagonal is exhausted before
+    ``rank`` steps the remaining columns are zero (harmless in Woodbury).
+    """
+    K1 = jnp.asarray(K1)
+    K2 = jnp.asarray(K2)
+    mask = jnp.asarray(mask, K1.dtype)
+    n, m = mask.shape
+    N = n * m
+    diag = (mask * (jnp.diag(K1)[:, None] * jnp.diag(K2)[None, :])).reshape(N)
+    mask_flat = mask.reshape(N)
+
+    def body(k, carry):
+        L, d, done = carry
+        dm = jnp.where(done, -jnp.inf, d)
+        j = jnp.argmax(dm)
+        pivot = dm[j]
+        valid = pivot > jitter
+        lkk = jnp.sqrt(jnp.maximum(pivot, jitter))
+        j1, j2 = j // m, j % m
+        row = (mask * (K1[:, j1][:, None] * K2[:, j2][None, :])).reshape(N)
+        row = row - L @ L[j]
+        col = jnp.where(done, 0.0, row / lkk).at[j].set(lkk)
+        col = jnp.where(valid, col * mask_flat, jnp.zeros_like(col))
+        L = L.at[:, k].set(col)
+        d = jnp.maximum(d - col * col, 0.0)
+        done = done.at[j].set(True)
+        return L, d, done
+
+    L0 = jnp.zeros((N, rank), K1.dtype)
+    done0 = jnp.zeros((N,), bool)
+    L, _, _ = jax.lax.fori_loop(0, rank, body, (L0, diag, done0))
+    return L
+
+
 def woodbury_preconditioner(L, noise):
     """M^{-1} v for M = L L^T + noise I, via Woodbury in O(N r).
 
@@ -77,7 +131,10 @@ def woodbury_preconditioner(L, noise):
 
     def apply(v):
         w = jnp.einsum("nr,...n->...r", L, v)
-        z = jax.scipy.linalg.cho_solve((chol, True), w[..., None])[..., 0]
+        # cho_solve wants matching batch dims; fold leading dims into the
+        # column axis instead so one (r, r) factor serves every RHS.
+        wf = w.reshape(-1, r)
+        z = jax.scipy.linalg.cho_solve((chol, True), wf.T).T.reshape(w.shape)
         return v / noise - jnp.einsum("nr,...r->...n", L, z) / noise
 
     return apply

@@ -72,6 +72,7 @@ class LKGPConfig:
     auto_cholesky_max: int = 800    # N_obs threshold for "auto"
     cg_tol: float = 0.01            # paper App. B
     cg_max_iters: int = 10_000      # paper App. B
+    precond_rank: int = 0           # >0: rank-r pivoted-Cholesky PCG (iterative/pallas)
     slq_probes: int = 16
     slq_iters: int = 25
     jitter: float = 1e-6

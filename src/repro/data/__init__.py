@@ -1,3 +1,4 @@
 """Learning-curve prior and token pipeline."""
-from .curves import CurveTask, benchmark_cutoffs, sample_task
+from .curves import (CurveTask, benchmark_cutoffs, noisy_step_fns,
+                     sample_suite, sample_task, stack_suite)
 from .tokens import TokenPipeline

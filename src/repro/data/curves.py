@@ -15,7 +15,8 @@ from typing import NamedTuple
 
 import numpy as np
 
-__all__ = ["CurveTask", "sample_task", "benchmark_cutoffs"]
+__all__ = ["CurveTask", "sample_task", "sample_suite", "stack_suite",
+           "noisy_step_fns", "benchmark_cutoffs"]
 
 
 class CurveTask(NamedTuple):
@@ -26,18 +27,30 @@ class CurveTask(NamedTuple):
     Y_full: np.ndarray  # ground truth (n, m)
 
 
-def _curve_family(rng, x, t_norm):
-    """One curve as a function of its hyper-parameters x (d >= 4 used)."""
-    kind = rng.integers(0, 4)
+def _curve_family(rng, x, t_norm, crossing: bool = False):
+    """One curve as a function of its hyper-parameters x (d >= 4 used).
+
+    ``crossing`` anti-correlates convergence rate with the asymptote
+    (high-asymptote configs are slow starters — the small-learning-rate
+    regime), so curves cross and early rankings mislead rank-based
+    promotion. In crossing mode the family is also a deterministic
+    function of x (real HPO response surfaces are; a per-curve coin flip
+    is irreducible noise no surrogate could transfer across configs).
+    """
+    kind = min(3, int(4.0 * x[2])) if crossing else rng.integers(0, 4)
     # config-dependent asymptote / rate / delay
     asym = 0.55 + 0.4 * (0.6 * x[0] + 0.4 * x[1]) - 0.1 * (x[2] - 0.5) ** 2
-    rate = 0.5 + 6.0 * x[2] + 2.0 * x[0]
+    if crossing:
+        rate = 0.5 + 6.0 * (1.0 - x[0]) + 2.0 * (1.0 - x[1])
+    else:
+        rate = 0.5 + 6.0 * x[2] + 2.0 * x[0]
     delay = 0.05 + 0.3 * x[3]
     lo = 0.08 + 0.15 * x[1]
     tt = np.maximum(t_norm - 0.02 * delay, 1e-4)
     if kind == 0:      # pow3: asym - a * t^-alpha
         a = (asym - lo)
-        y = asym - a * np.power(tt * 50 + 1, -0.3 - 1.5 * x[2])
+        pow_p = 0.3 + 1.5 * ((1.0 - x[0]) if crossing else x[2])
+        y = asym - a * np.power(tt * 50 + 1, -pow_p)
     elif kind == 1:    # log-power
         y = asym / (1 + np.power(tt * 30 / np.exp(delay), -(0.8 + rate / 4)))
         y = lo + (asym - lo) * (y / max(asym, 1e-3))
@@ -51,12 +64,14 @@ def _curve_family(rng, x, t_norm):
 def sample_task(seed: int, n: int = 32, m: int = 20, d: int = 7,
                 observed_fraction: tuple[float, float] = (0.1, 0.9),
                 noise: float = 0.01, spike_prob: float = 0.05,
-                diverge_prob: float = 0.03) -> CurveTask:
+                diverge_prob: float = 0.03,
+                crossing: bool = False) -> CurveTask:
     rng = np.random.default_rng(seed)
     X = rng.uniform(0, 1, (n, d))
     t = np.arange(1.0, m + 1.0)
     t_norm = (t - 1) / (m - 1) if m > 1 else t * 0 + 1.0
-    Y = np.stack([_curve_family(rng, X[i], t_norm) for i in range(n)])
+    Y = np.stack([_curve_family(rng, X[i], t_norm, crossing=crossing)
+                  for i in range(n)])
 
     # noise, spikes, divergence (Fig 1 right panel regimes)
     Y = Y + rng.normal(0, noise * (0.5 + X[:, :1]), Y.shape)
@@ -74,6 +89,57 @@ def sample_task(seed: int, n: int = 32, m: int = 20, d: int = 7,
     lens[rng.integers(0, n)] = m  # keep one fully observed curve
     mask = (np.arange(m)[None, :] < lens[:, None]).astype(np.float64)
     return CurveTask(X=X, t=t, Y=Y * mask, mask=mask, Y_full=Y_full)
+
+
+def sample_suite(seed: int, num_tasks: int, n: int = 16, m: int = 12,
+                 d: int = 7, **task_kwargs) -> list[CurveTask]:
+    """A suite of independent tasks with shared shapes (one noise regime).
+
+    All tasks share (n, m, d) so the suite can be stacked for the batched
+    ``fit_batch`` / ``posterior_batch`` path; ``task_kwargs`` forward to
+    :func:`sample_task` (noise, spike_prob, diverge_prob, ...).
+    """
+    return [sample_task(seed * 1000 + b, n=n, m=m, d=d, **task_kwargs)
+            for b in range(num_tasks)]
+
+
+def stack_suite(tasks: list[CurveTask]):
+    """Stack a shape-aligned suite into (X, t, Y, mask, Y_full) batch arrays."""
+    if len({(tk.X.shape, tk.Y.shape) for tk in tasks}) != 1:
+        raise ValueError("stack_suite needs shape-aligned tasks "
+                         "(use sample_suite)")
+    return (np.stack([tk.X for tk in tasks]),
+            tasks[0].t,
+            np.stack([tk.Y for tk in tasks]),
+            np.stack([tk.mask for tk in tasks]),
+            np.stack([tk.Y_full for tk in tasks]))
+
+
+def noisy_step_fns(task: CurveTask, seed: int, obs_noise: float = 0.02,
+                   spike_prob: float = 0.03):
+    """Per-config ``step() -> observed metric`` callables over a task.
+
+    The scheduler-facing observation model: the clean curve ``Y_full`` plus
+    Gaussian eval noise and occasional downward spikes — noise lives in the
+    *observation stream* (as in real eval pipelines), so ``Y_full`` remains
+    the ground truth that regret is measured against. Shared by
+    ``benchmarks/bench_automl.py``, ``examples/successive_halving.py`` and
+    the scheduler tests so the three stay on one observation model.
+    """
+    rng = np.random.default_rng(seed)
+    counters = [0] * len(task.X)
+
+    def mk(i):
+        def step():
+            e = counters[i]
+            counters[i] += 1
+            v = task.Y_full[i, e] + rng.normal(0, obs_noise)
+            if rng.random() < spike_prob:
+                v -= rng.uniform(0.05, 0.3)
+            return float(v)
+        return step
+
+    return [mk(i) for i in range(len(task.X))]
 
 
 def benchmark_cutoffs(n_train_examples: int, n: int, m: int,

@@ -1,0 +1,266 @@
+"""Scheduler layer: CurvePredictor, SH vs rank promotion, PCG, batching."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.autotune import (AutotuneConfig, CurvePredictor,
+                            FreezeThawScheduler, HyperbandScheduler, RunPool,
+                            SHConfig, SuccessiveHalvingScheduler)
+from repro.core import (LKGPConfig, cg_solve, fit, fit_batch, get_engine,
+                        gram_matrices, init_params, pcg_solve,
+                        pivoted_cholesky_grid, posterior, posterior_batch,
+                        unstack, woodbury_preconditioner)
+from repro.data import noisy_step_fns, sample_suite, sample_task, stack_suite
+
+
+def _gp(**kw):
+    base = dict(lbfgs_iters=15, posterior_samples=32, slq_probes=8,
+                slq_iters=10)
+    base.update(kw)
+    return LKGPConfig(**base)
+
+
+# --------------------------------------------------------------------------
+# CurvePredictor / RunPool
+# --------------------------------------------------------------------------
+def test_curve_predictor_cold_fit_then_warm_extend():
+    task = sample_task(seed=1, n=6, m=8, d=4)
+    pred = CurvePredictor(task.X, 8, gp=_gp(), seed=0)
+    mask1 = np.zeros_like(task.mask)
+    mask1[:, :3] = 1.0
+    pred.update(task.Y_full * mask1, mask1)
+    assert pred.state is not None and pred.n_refits == 1
+    mean1, std1 = pred.predict_final()
+    assert mean1.shape == (6,) and np.all(std1 >= 0)
+
+    mask2 = mask1.copy()
+    mask2[:, :5] = 1.0
+    pred.update(task.Y_full * mask2, mask2)
+    assert pred.n_refits == 2
+    assert int(np.sum(np.asarray(pred.state.mask))) == int(mask2.sum())
+
+    with pytest.raises(ValueError, match="superset"):
+        pred.update(task.Y_full * mask1, mask1)   # mask must grow
+
+
+def test_curve_predictor_minimize_sign_and_rules():
+    task = sample_task(seed=2, n=5, m=6, d=4)
+    pred = CurvePredictor(task.X, 6, gp=_gp(), maximize=False)
+    mask = np.ones_like(task.mask)
+    pred.update(task.Y_full, mask)
+    mean, _ = pred.predict_final()
+    # score space negates; to_raw undoes it
+    np.testing.assert_allclose(pred.to_raw(mean), -mean)
+    ucb = pred.scores(rule="ucb", ucb_beta=1.0)
+    med = pred.scores(rule="quantile", quantile=0.5)
+    hi = pred.scores(rule="quantile", quantile=0.9)
+    assert np.all(ucb >= med) and np.all(hi >= med)
+    with pytest.raises(ValueError, match="unknown promotion rule"):
+        pred.scores(rule="nope")
+
+
+def test_run_pool_budget_and_free_history():
+    task = sample_task(seed=3, n=4, m=6, d=4)
+    pool = RunPool(noisy_step_fns(task, 0, 0.0, 0.0), 6, budget=5)
+    pool.advance_to(0, 6, charge=False)     # history: free
+    assert pool.spent == 0 and pool.epochs_done[0] == 6
+    pool.advance_to(1, 4)
+    pool.advance_to(2, 4)                   # budget runs out after 1 epoch
+    assert pool.spent == 5 and pool.exhausted()
+    assert pool.epochs_done[1] == 4 and pool.epochs_done[2] == 1
+    assert pool.observed_last(1) == pytest.approx(task.Y_full[1, 3])
+    assert np.isnan(pool.observed_last(3))
+
+
+# --------------------------------------------------------------------------
+# SH / Hyperband / freeze-thaw on a recoverable synthetic task
+# --------------------------------------------------------------------------
+def _sh_race(promotion, task, fresh, hist, seed=1):
+    cfg = SHConfig(max_epochs=task.Y_full.shape[1], min_epochs=1, eta=3,
+                   promotion=promotion, ucb_beta=0.0, refit_lbfgs_iters=8,
+                   gp=_gp(lbfgs_iters=20, posterior_samples=64))
+    sched = SuccessiveHalvingScheduler(
+        task.X, noisy_step_fns(task, 7000 + seed), cfg, seed=seed)
+    for i in hist:
+        sched.pool.advance_to(i, task.Y_full.shape[1], charge=False)
+    return sched.run(subset=fresh)
+
+
+def test_sh_lkgp_beats_rank_at_equal_budget():
+    """Crossing curves + completed history: the LKGP promotion recovers the
+    best config where rank-based promotion (same rung schedule, same epoch
+    budget) is misled by early rankings."""
+    task = sample_task(seed=501, n=12, m=9, d=5, noise=0.005,
+                       spike_prob=0.0, diverge_prob=0.0, crossing=True)
+    rng = np.random.default_rng(1)
+    hist = rng.choice(12, 3, replace=False)
+    fresh = np.setdiff1d(np.arange(12), hist).tolist()
+    true_final = task.Y_full[:, -1]
+    best = float(true_final[fresh].max())
+
+    s_gp = _sh_race("lkgp", task, fresh, hist)
+    s_rk = _sh_race("rank", task, fresh, hist)
+    assert s_gp["epochs_spent"] == s_rk["epochs_spent"]
+    regret_gp = best - float(true_final[s_gp["selected"]])
+    regret_rk = best - float(true_final[s_rk["selected"]])
+    assert regret_gp < regret_rk
+    assert regret_gp < 0.02
+    # both raced only the fresh subset
+    assert set(s_gp["survivors"]) <= set(fresh)
+
+
+def test_sh_rank_mode_never_builds_a_model():
+    task = sample_task(seed=5, n=6, m=6, d=4)
+    cfg = SHConfig(max_epochs=6, min_epochs=1, eta=2, promotion="rank")
+    sched = SuccessiveHalvingScheduler(
+        task.X, noisy_step_fns(task, 0, 0.0, 0.0), cfg)
+    summary = sched.run()
+    assert sched.predictor is None
+    assert "predicted_final" not in summary
+    assert summary["rungs"][0]["target_epochs"] == 1
+
+
+def test_sh_rank_exhausted_budget_never_selects_unrun_config():
+    """With the pool budget exhausted mid-rung, never-run configs (NaN
+    observed value) must rank worst, not win the argmax."""
+    task = sample_task(seed=8, n=9, m=6, d=4)
+    cfg = SHConfig(max_epochs=6, min_epochs=1, eta=3, promotion="rank")
+    sched = SuccessiveHalvingScheduler(
+        task.X, noisy_step_fns(task, 0, 0.0, 0.0), cfg)
+    sched.pool.budget = 2
+    summary = sched.run()
+    assert sched.pool.epochs_done[summary["selected"]] > 0
+
+
+def test_hyperband_shares_pool_across_brackets():
+    task = sample_task(seed=6, n=10, m=9, d=4, noise=0.005, spike_prob=0.0,
+                       crossing=True)
+    cfg = SHConfig(max_epochs=9, min_epochs=1, eta=3, promotion="lkgp",
+                   ucb_beta=0.0, refit_lbfgs_iters=5,
+                   gp=_gp(lbfgs_iters=10))
+    hb = HyperbandScheduler(task.X, noisy_step_fns(task, 1), cfg, seed=0)
+    summary = hb.run()
+    assert len(summary["brackets"]) == 3          # s = 2, 1, 0
+    assert 0 <= summary["selected"] < 10
+    # shared pool: total epochs spent is bounded by the grid size
+    assert summary["epochs_spent"] <= 10 * 9
+    # later brackets must not re-run epochs (spent strictly less than the
+    # sum of per-bracket resource if pools were separate)
+    per_bracket = [b["epochs_spent"] for b in summary["brackets"]]
+    assert per_bracket == sorted(per_bracket)     # cumulative accounting
+
+
+def test_freeze_thaw_keeps_best_config():
+    task = sample_task(seed=7, n=8, m=10, d=5, noise=0.005, spike_prob=0.0)
+    cfg = AutotuneConfig(max_epochs=10, refit_every=3,
+                         min_epochs_before_stop=4, ucb_beta=1.5,
+                         gp=_gp(lbfgs_iters=20), refit_lbfgs_iters=8)
+    sched = FreezeThawScheduler(
+        task.X, noisy_step_fns(task, 2, 0.01, 0.0), cfg, seed=0)
+    summary = sched.run()
+    best = int(np.argmax(task.Y_full[:, -1]))
+    assert best in summary["survivors"]
+    assert summary["epochs_spent"] <= 8 * 10
+    assert sched.state is not None                # predictor state exposed
+
+
+# --------------------------------------------------------------------------
+# preconditioned CG
+# --------------------------------------------------------------------------
+def test_pcg_matches_cg_with_fewer_iterations():
+    task = sample_task(seed=9, n=16, m=12, d=5)
+    X = jnp.asarray(task.X)
+    params = init_params(X.shape[1], X.dtype)
+    K1, K2 = gram_matrices(params, X, jnp.asarray(task.t, X.dtype))
+    mask = jnp.asarray(task.mask, X.dtype)
+    noise = jnp.exp(params.raw_noise)
+    A = get_engine("iterative").operator_from_grams(K1, K2, mask, noise)
+    b = jnp.asarray(task.Y * task.mask, X.dtype)
+    n, m = mask.shape
+
+    base = cg_solve(A, b, tol=1e-8, max_iters=5000)
+    L = pivoted_cholesky_grid(K1, K2, mask, 20)
+    M_inv = woodbury_preconditioner(L, noise)
+    res = pcg_solve(lambda u: A(u.reshape(*u.shape[:-1], n, m)).reshape(u.shape),
+                    b.reshape(-1), M_inv, tol=1e-8, max_iters=5000)
+    np.testing.assert_allclose(np.asarray(res.x).reshape(n, m),
+                               np.asarray(base.x), atol=1e-6)
+    assert int(res.iters) < int(base.iters)
+
+
+@pytest.mark.parametrize("backend", ["iterative", "pallas"])
+def test_precond_rank_through_engine_solve(backend):
+    task = sample_task(seed=10, n=10, m=8, d=4)
+    X = jnp.asarray(task.X)
+    params = init_params(X.shape[1], X.dtype)
+    K1, K2 = gram_matrices(params, X, jnp.asarray(task.t, X.dtype))
+    mask = jnp.asarray(task.mask, X.dtype)
+    engine = get_engine(backend)
+    A = engine.operator_from_grams(K1, K2, mask, jnp.exp(params.raw_noise))
+    b = jnp.asarray(task.Y * task.mask, X.dtype)
+
+    plain = engine.solve(A, b, LKGPConfig(cg_tol=1e-8, cg_max_iters=5000))
+    pre = engine.solve(A, b, LKGPConfig(cg_tol=1e-8, cg_max_iters=5000,
+                                        precond_rank=15))
+    np.testing.assert_allclose(np.asarray(pre), np.asarray(plain), atol=1e-4)
+
+    # batched RHS (the MLL path stacks probes on top of Y)
+    rhs = jnp.stack([b, b * 0.5])
+    pre_b = engine.solve(A, rhs, LKGPConfig(cg_tol=1e-8, cg_max_iters=5000,
+                                            precond_rank=15))
+    assert pre_b.shape == rhs.shape
+    np.testing.assert_allclose(np.asarray(pre_b[0]), np.asarray(plain),
+                               atol=1e-4)
+
+
+def test_precond_fit_posterior_parity():
+    """End to end: precond_rank changes the solver, not the answer."""
+    import dataclasses
+
+    task = sample_task(seed=11, n=12, m=10, d=5)
+    base_cfg = _gp(lbfgs_iters=3, cg_tol=1e-6, cg_max_iters=2000)
+    cfg0 = dataclasses.replace(base_cfg, backend="iterative")
+    cfg1 = dataclasses.replace(cfg0, precond_rank=15)
+    st0 = fit(task.X, task.t, task.Y, task.mask, cfg0)
+    st1 = fit(task.X, task.t, task.Y, task.mask, cfg1)
+    m0 = np.asarray(posterior(st0).mean)
+    m1 = np.asarray(posterior(st1).mean)
+    np.testing.assert_allclose(m1, m0, atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# batched posterior vs per-task loop
+# --------------------------------------------------------------------------
+def test_posterior_batch_matches_per_task_loop():
+    tasks = sample_suite(seed=4, num_tasks=3, n=5, m=6, d=4)
+    X, t, Y, mask, _ = stack_suite(tasks)
+    cfg = LKGPConfig(lbfgs_iters=10, mll_method="cholesky")
+    batched = fit_batch(X, t, Y, mask, cfg)
+
+    bp = posterior_batch(batched)
+    mean_b = np.asarray(bp.mean)
+    fmean_b, fvar_b = bp.final()
+    assert mean_b.shape == (3, 5, 6)
+    assert fmean_b.shape == (3, 5) and fvar_b.shape == (3, 5)
+    assert np.all(np.asarray(fvar_b) > 0)
+
+    for i, st in enumerate(unstack(batched)):
+        p = posterior(st, engine=get_engine("dense"))
+        np.testing.assert_allclose(mean_b[i], np.asarray(p.mean), atol=1e-8)
+        np.testing.assert_allclose(np.asarray(fmean_b)[i],
+                                   np.asarray(p.mean)[:, -1], atol=1e-8)
+        # exact batched variance vs per-task Matheron MC estimate
+        _, v_mc = p.final()
+        np.testing.assert_allclose(np.asarray(fvar_b)[i], np.asarray(v_mc),
+                                   rtol=0.6, atol=0.02)
+
+
+def test_posterior_batch_rejects_unbatched_state():
+    task = sample_task(seed=12, n=4, m=5, d=4)
+    st = fit(task.X, task.t, task.Y, task.mask, LKGPConfig(lbfgs_iters=0))
+    with pytest.raises(ValueError, match="batched state"):
+        posterior_batch(st)
