@@ -1,0 +1,164 @@
+"""Learning-curve prediction head-to-head: LKGP vs amortized transformer.
+
+Reproduces the paper's headline experimental claim — "our GP model can
+match the performance of a Transformer on a learning curve prediction
+task" (PAPER.md §5) — on the offline synthetic LCBench-like prior:
+
+1. pre-train the curve transformer (:mod:`repro.baselines`) on a stream of
+   synthetic tasks covering every regime (noise / spikes / divergence /
+   crossing families, curriculum over observed-prefix fraction);
+2. score the LKGP (``fit`` -> ``Posterior.mean`` / ``.variance``) and the
+   transformer on *identical* held-out suites at three observation-cutoff
+   fractions: continuation NLL, MAE, Spearman rank correlation of
+   final-epoch values, and fit/predict wall-clock;
+3. write ``BENCH_curve_pred.json`` with per-row results, per-model summary
+   means, and the acceptance booleans CI gates on (the LKGP must stay
+   within a fixed tolerance of the transformer; tolerances are absolute —
+   accuracy units for MAE, nats for NLL — because the transformer is
+   amortized over the exact task prior and sets a strong reference).
+
+    PYTHONPATH=src python benchmarks/bench_curve_pred.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+
+from repro.baselines import (CurveTransformerConfig, PretrainConfig,
+                             head_to_head, pretrain)
+from repro.core import LKGPConfig
+from repro.data import sample_suite
+
+# Paper-tolerance margins for "the GP matches the Transformer" (absolute:
+# accuracy units for MAE, nats per cell for NLL, Spearman units for rank).
+MAE_TOL = 0.08
+NLL_TOL = 1.5
+RANK_TOL = 0.35
+
+
+def _suites(quick: bool):
+    base = dict(d=7, noise=0.01, spike_prob=0.03)
+    if quick:
+        return [
+            dict(name="smoke-mixed", seed=901, num_tasks=2, n=10,
+                 diverge_prob=0.03, crossing=False, **base),
+            dict(name="smoke-crossing", seed=902, num_tasks=2, n=10,
+                 diverge_prob=0.0, crossing=True, **base),
+        ]
+    return [
+        dict(name="mixed", seed=901, num_tasks=5, n=16,
+             diverge_prob=0.03, crossing=False, **base),
+        dict(name="crossing", seed=902, num_tasks=5, n=16,
+             diverge_prob=0.0, crossing=True, **base),
+        dict(name="noisy-divergent", seed=903, num_tasks=5, n=16,
+             diverge_prob=0.08, crossing=False, **dict(base, noise=0.03)),
+    ]
+
+
+def _summarise(rows):
+    out = {}
+    for model in ("lkgp", "transformer"):
+        sel = [r for r in rows if r["model"] == model]
+        out[model] = {k: round(float(np.mean([r[k] for r in sel])), 5)
+                      for k in ("nll", "mae", "rank_corr", "fit_s",
+                                "predict_s")}
+    return out
+
+
+def main(quick: bool = False, steps: int | None = None, seed: int = 0,
+         out_path: str = "BENCH_curve_pred.json", out=print):
+    t_all = time.time()
+    m = 9 if quick else 12
+    model_cfg = (CurveTransformerConfig(d_model=32, num_layers=2,
+                                        num_heads=2, d_ff=64)
+                 if quick else CurveTransformerConfig())
+    pre_cfg = PretrainConfig(
+        steps=steps or (250 if quick else 2000),
+        tasks_per_step=4 if quick else 6,
+        n=10 if quick else 16, m=m, seed=seed,
+        log_every=100 if quick else 200)
+    out(f"# pre-training curve transformer ({pre_cfg.steps} steps, "
+        f"m={pre_cfg.m})")
+    params, pre_info = pretrain(model_cfg, pre_cfg, out=out)
+    out(f"# pretrain: nll {pre_info['first_loss']} -> "
+        f"{pre_info['final_loss']} in {pre_info['train_s']}s")
+
+    gp_cfg = LKGPConfig(lbfgs_iters=40, seed=seed)
+    cutoffs = (0.2, 0.4, 0.7)
+    rows = []
+    for suite in _suites(quick):
+        tasks = sample_suite(suite["seed"], suite["num_tasks"],
+                             n=suite["n"], m=m, d=suite["d"],
+                             noise=suite["noise"],
+                             spike_prob=suite["spike_prob"],
+                             diverge_prob=suite["diverge_prob"],
+                             crossing=suite["crossing"])
+        out(f"# suite {suite['name']}: {suite['num_tasks']} tasks, "
+            f"n={suite['n']} m={m}, cutoffs {cutoffs}")
+        rows += head_to_head(params, model_cfg, tasks, cutoffs=cutoffs,
+                             gp_cfg=gp_cfg, seed=seed, suite=suite["name"])
+
+    summary = _summarise(rows)
+    out("model,nll,mae,rank_corr,fit_s,predict_s")
+    for name, s in summary.items():
+        out(f"{name},{s['nll']},{s['mae']},{s['rank_corr']},{s['fit_s']},"
+            f"{s['predict_s']}")
+
+    lk, tf = summary["lkgp"], summary["transformer"]
+    acceptance = {
+        "all_cutoffs_scored": all(
+            any(r["cutoff"] == c and r["model"] == mdl for r in rows)
+            for c in cutoffs for mdl in ("lkgp", "transformer")),
+        "lkgp_matches_transformer_mae": lk["mae"] <= tf["mae"] + MAE_TOL,
+        "lkgp_matches_transformer_nll": lk["nll"] <= tf["nll"] + NLL_TOL,
+        "lkgp_matches_transformer_rank": (lk["rank_corr"]
+                                          >= tf["rank_corr"] - RANK_TOL),
+        "transformer_pretrain_converged": (pre_info["final_loss"]
+                                           < pre_info["first_loss"]),
+    }
+    for k, v in acceptance.items():
+        out(f"# acceptance {k}: {v}")
+
+    payload = {
+        "meta": {
+            "jax_backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "platform": platform.platform(),
+            "quick": quick,
+            "seed": seed,
+            "cutoffs": list(cutoffs),
+            "tolerances": {"mae": MAE_TOL, "nll": NLL_TOL, "rank": RANK_TOL},
+            "gp": {"lbfgs_iters": gp_cfg.lbfgs_iters},
+            "transformer": {"d_model": model_cfg.d_model,
+                            "num_layers": model_cfg.num_layers,
+                            "pretrain": pre_info},
+        },
+        "results": rows,
+        "summary": summary,
+        "acceptance": acceptance,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    out(f"# wrote {out_path} ({time.time() - t_all:.1f}s total)")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke sizes for CI (tiny model, short pretrain)")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override pre-training steps")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_curve_pred.json")
+    args = ap.parse_args()
+    main(quick=args.quick, steps=args.steps, seed=args.seed,
+         out_path=args.out)

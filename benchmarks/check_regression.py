@@ -4,6 +4,7 @@
         --baseline BENCH_baseline.json \
         --backends BENCH_backends.ci.json \
         --automl BENCH_automl.ci.json \
+        --curvepred BENCH_curve_pred.ci.json \
         --factor 2.0
 
 Fails (exit 1) when
@@ -13,7 +14,10 @@ Fails (exit 1) when
   committed ``BENCH_baseline.json``, or
 * either headline acceptance claim measured by ``bench_automl`` is false
   (LKGP-ranked SH beats rank-based at equal budget; ``precond_rank > 0``
-  reduces CG iterations).
+  reduces CG iterations), or
+* any acceptance claim measured by ``bench_curve_pred`` is false (the LKGP
+  stays within the paper's "matches a Transformer" tolerance on NLL / MAE /
+  final-value rank correlation, on identical held-out suites).
 
 The committed baseline was measured on a different machine than the CI
 runner, so raw wall times are not comparable. Timings are therefore
@@ -48,7 +52,7 @@ def _speed_reference(cells):
 
 
 def check(baseline: dict, backends: dict, automl: dict,
-          factor: float) -> list[str]:
+          factor: float, curvepred: dict | None = None) -> list[str]:
     failures = []
 
     base_cells = _backend_cells(baseline["backends"])
@@ -89,6 +93,24 @@ def check(baseline: dict, backends: dict, automl: dict,
         base_r = base_sched.get(sched)
         print(f"info      automl {sched}: mean regret {regret}"
               + (f" (baseline {base_r})" if base_r is not None else ""))
+
+    if curvepred is not None:
+        for claim, value in curvepred["acceptance"].items():
+            if value:
+                print(f"ok        curve_pred acceptance: {claim}")
+            else:
+                failures.append(f"CLAIM FAILED curve_pred acceptance: {claim}")
+        # Prediction-quality deltas vs the committed baseline summary are
+        # informational: the smoke transformer is tiny and briefly trained,
+        # so its absolute metrics move with runner/python version — the
+        # gate is the tolerance-band acceptance above, not these numbers.
+        base_sum = baseline.get("curve_pred", {}).get("summary", {})
+        for model, s in curvepred.get("summary", {}).items():
+            base_s = base_sum.get(model, {})
+            print(f"info      curve_pred {model}: nll {s['nll']} "
+                  f"mae {s['mae']} rank {s['rank_corr']}"
+                  + (f" (baseline nll {base_s.get('nll')} "
+                     f"mae {base_s.get('mae')})" if base_s else ""))
     return failures
 
 
@@ -97,6 +119,8 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", default="BENCH_baseline.json")
     ap.add_argument("--backends", default="BENCH_backends.ci.json")
     ap.add_argument("--automl", default="BENCH_automl.ci.json")
+    ap.add_argument("--curvepred", default=None,
+                    help="BENCH_curve_pred json to gate (omit to skip)")
     ap.add_argument("--factor", type=float, default=2.0)
     args = ap.parse_args(argv)
 
@@ -106,8 +130,12 @@ def main(argv=None) -> int:
         backends = json.load(f)
     with open(args.automl) as f:
         automl = json.load(f)
+    curvepred = None
+    if args.curvepred:
+        with open(args.curvepred) as f:
+            curvepred = json.load(f)
 
-    failures = check(baseline, backends, automl, args.factor)
+    failures = check(baseline, backends, automl, args.factor, curvepred)
     if failures:
         print("\n".join(["", "benchmark gate FAILED:"] + failures))
         return 1

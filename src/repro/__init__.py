@@ -10,6 +10,7 @@ Layout:
   repro.distributed — sharding rules, collectives, distributed LKGP
   repro.checkpoint  — fault-tolerant checkpoint manager
   repro.autotune    — LKGP-driven early-stopping scheduler
+  repro.baselines   — amortized transformer baseline + head-to-head eval
   repro.launch      — production meshes, multi-pod dry-run, roofline
 """
 __version__ = "1.0.0"

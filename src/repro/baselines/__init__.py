@@ -1,0 +1,36 @@
+"""Amortized learning-curve baselines (the paper's Transformer competitor).
+
+The paper's headline experimental claim is that the LKGP "can match the
+performance of a Transformer on a learning curve prediction task"; this
+package provides that Transformer and the head-to-head harness:
+
+* :mod:`~repro.baselines.curve_transformer` — a curve-prediction
+  transformer that encodes (hyper-parameter vector, observed curve prefix
+  with explicit missing-value mask) and decodes the full curve as a
+  heteroscedastic Gaussian per step, built from the shared
+  :mod:`repro.models.layers` blocks;
+* :mod:`~repro.baselines.pretrain` — amortized pre-training on streams of
+  synthetic tasks from :func:`repro.data.curves.sample_suite` (all noise /
+  spike / divergence / crossing regimes) with a curriculum over the
+  observed-prefix fraction, driven through
+  :func:`repro.train.trainer.make_train_step`;
+* :mod:`~repro.baselines.evaluate` — scores the LKGP and the transformer
+  on identical held-out suites (NLL, MAE, final-value rank correlation at
+  several observation cutoffs, plus fit/predict wall-clock).
+"""
+from .curve_transformer import (CurveModel, CurveTransformerConfig,
+                                build_curve_model, curve_loss, forward,
+                                gaussian_nll, normalize_t, param_table,
+                                predict_task)
+from .evaluate import (cutoff_masks, eval_lkgp, eval_transformer,
+                       head_to_head, score_predictions)
+from .pretrain import PretrainConfig, pretrain, sample_stream_batch
+
+__all__ = [
+    "CurveModel", "CurveTransformerConfig", "build_curve_model",
+    "curve_loss", "forward", "gaussian_nll", "normalize_t", "param_table",
+    "predict_task",
+    "PretrainConfig", "pretrain", "sample_stream_batch",
+    "cutoff_masks", "eval_lkgp", "eval_transformer", "head_to_head",
+    "score_predictions",
+]

@@ -1,0 +1,212 @@
+"""Curve-prediction transformer: amortized learning-curve continuation.
+
+The model is the paper's Transformer competitor (an FT-PFN-style amortized
+predictor, cf. Rakotoarison et al. 2024): each curve is a sequence of epoch
+tokens carrying ``(observed value, missing-value mask, progression
+encoding)``, a conditioning token embeds the curve's hyper-parameter
+vector, a bidirectional transformer encoder attends over the ``m + 1``
+tokens, and a heteroscedastic head decodes a Gaussian ``N(mu_j, sigma_j^2)``
+for every epoch ``j`` — observed or not. Trained on streams of synthetic
+tasks (see :mod:`repro.baselines.pretrain`), one forward pass amortizes the
+whole fit-and-predict loop the LKGP runs per task.
+
+Built from the shared neural-net blocks in :mod:`repro.models.layers`
+(``rms_norm`` / ``attention`` / ``mlp``) with parameters materialised by the
+same table machinery the model zoo uses (:func:`repro.models.transformer
+.build_params`), so the baseline plugs straight into
+:func:`repro.train.trainer.make_train_step`.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.layers import attention, mlp, mlp_params, rms_norm
+from ..models.transformer import build_params, table_logical
+
+__all__ = ["CurveTransformerConfig", "CurveModel", "param_table",
+           "build_curve_model", "encode_features", "forward", "gaussian_nll",
+           "curve_loss", "normalize_t", "predict_task"]
+
+
+@dataclass(frozen=True)
+class CurveTransformerConfig:
+    """Shape + loss configuration for the curve transformer."""
+    d_in: int = 7              # hyper-parameter dimension
+    d_model: int = 64
+    num_layers: int = 3
+    num_heads: int = 4
+    d_ff: int = 128
+    mlp_act: str = "swiglu"
+    norm_eps: float = 1e-6
+    min_sigma: float = 1e-3    # floor on the predicted std
+    fourier_feats: int = 6     # continuous progression encoding (any m works)
+    obs_loss_weight: float = 0.1  # NLL weight on observed (vs continued) cells
+    dtype: Any = jnp.float32
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.num_heads
+
+    @property
+    def num_features(self) -> int:
+        # (masked value, mask flag, t_norm) + sin/cos Fourier features of t.
+        return 3 + 2 * self.fourier_feats
+
+
+class CurveModel(NamedTuple):
+    """Functional endpoints; duck-types the zoo ``Model`` for the trainer."""
+    cfg: CurveTransformerConfig
+    param_table: dict
+    logical: dict
+    init: Callable
+    loss: Callable
+    predict: Callable
+
+
+# --------------------------------------------------------------------------
+# parameter table (same (shape, logical_axes, fan_in) format as the zoo)
+# --------------------------------------------------------------------------
+def _layer_table(cfg: CurveTransformerConfig):
+    D, H, Dh = cfg.d_model, cfg.num_heads, cfg.head_dim
+    t = {
+        "ln1": ((D,), ("embed",), None),
+        "wq": ((D, H * Dh), ("embed", "heads_fused"), D),
+        "wk": ((D, H * Dh), ("embed", "heads_fused"), D),
+        "wv": ((D, H * Dh), ("embed", "heads_fused"), D),
+        "wo": ((H * Dh, D), ("heads_fused", "embed"), H * Dh),
+        "ln2": ((D,), ("embed",), None),
+    }
+    for k, v in mlp_params(cfg.mlp_act, D, cfg.d_ff).items():
+        t[f"mlp/{k}"] = v
+    return t
+
+
+def param_table(cfg: CurveTransformerConfig):
+    D = cfg.d_model
+    table = {
+        "in_proj/w": ((cfg.num_features, D), (None, "embed"), cfg.num_features),
+        "in_proj/b": ((D,), ("embed",), None),
+        "hp_embed/w0": ((cfg.d_in, D), (None, "embed"), cfg.d_in),
+        "hp_embed/b0": ((D,), ("embed",), None),
+        "hp_embed/w1": ((D, D), ("embed", None), D),
+        "final_norm": ((D,), ("embed",), None),
+        "head/w": ((D, 2), ("embed", None), D),
+        "head/b": ((2,), (None,), None),
+    }
+    for k, (shape, logical, fan) in _layer_table(cfg).items():
+        table[f"layers/{k}"] = ((cfg.num_layers, *shape),
+                                ("layers", *logical), fan)
+    return table
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+def normalize_t(t) -> jnp.ndarray:
+    """Log-scale progressions to [0, 1] (matches ``TTransform``).
+
+    Host-side numpy on purpose: callers pass concrete epoch grids, and a
+    ``jnp.float64`` request would warn/truncate whenever x64 is off.
+    """
+    lt = np.log(np.asarray(t, np.float64))
+    span = max(float(lt[-1] - lt[0]), 1e-9)
+    return jnp.asarray((lt - lt[0]) / span, jnp.float32)
+
+
+def encode_features(y, mask, t_norm, cfg: CurveTransformerConfig):
+    """Per-epoch token features: masked value, mask flag, progression enc."""
+    B, m = y.shape
+    ym = (y * mask).astype(cfg.dtype)
+    freqs = (2.0 ** jnp.arange(cfg.fourier_feats, dtype=jnp.float32)) * math.pi
+    ang = t_norm.astype(jnp.float32)[:, None] * freqs[None, :]
+    tf = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)    # (m, 2F)
+    tf = jnp.broadcast_to(tf[None], (B, m, 2 * cfg.fourier_feats))
+    tcol = jnp.broadcast_to(t_norm.astype(cfg.dtype)[None, :, None], (B, m, 1))
+    return jnp.concatenate([ym[..., None], mask.astype(cfg.dtype)[..., None],
+                            tcol, tf.astype(cfg.dtype)], axis=-1)
+
+
+def forward(params, hp, y, mask, t_norm, cfg: CurveTransformerConfig):
+    """hp: (B, d_in); y, mask: (B, m); t_norm: (m,) -> (mu, sigma), (B, m).
+
+    Values at ``mask == 0`` cells never enter the computation (the feature
+    encoder zeroes them), so predictions depend only on the observed prefix.
+    """
+    B, m = y.shape
+    H, Dh = cfg.num_heads, cfg.head_dim
+    x = encode_features(y, mask, t_norm, cfg)
+    x = x @ params["in_proj"]["w"] + params["in_proj"]["b"]
+    h0 = jax.nn.gelu(hp.astype(cfg.dtype) @ params["hp_embed"]["w0"]
+                     + params["hp_embed"]["b0"])
+    h0 = h0 @ params["hp_embed"]["w1"]
+    x = jnp.concatenate([h0[:, None, :], x], axis=1)      # (B, m + 1, D)
+    S = m + 1
+
+    def body(h, lp):
+        hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q = (hn @ lp["wq"]).reshape(B, S, H, Dh)
+        k = (hn @ lp["wk"]).reshape(B, S, H, Dh)
+        v = (hn @ lp["wv"]).reshape(B, S, H, Dh)
+        a = attention(q, k, v, causal=False)              # bidirectional
+        h = h + a.reshape(B, S, H * Dh) @ lp["wo"]
+        hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + mlp(hn, lp["mlp"], cfg.mlp_act)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    out = x[:, 1:, :] @ params["head"]["w"] + params["head"]["b"]  # (B, m, 2)
+    mu = out[..., 0]
+    sigma = cfg.min_sigma + jax.nn.softplus(out[..., 1])
+    return mu, sigma
+
+
+# --------------------------------------------------------------------------
+# loss
+# --------------------------------------------------------------------------
+def gaussian_nll(mu, sigma, target):
+    """Per-cell negative log-likelihood of a heteroscedastic Gaussian."""
+    var = sigma * sigma
+    return 0.5 * (jnp.log(2.0 * math.pi * var)
+                  + (target - mu) ** 2 / var)
+
+
+def curve_loss(params, batch, cfg: CurveTransformerConfig,
+               constrain=lambda t, names: t):
+    """Weighted NLL: full weight on continuation cells, ``obs_loss_weight``
+    on the (noisy) observed prefix. Batch keys: hp, y, mask, t_norm, target.
+    """
+    mu, sigma = forward(params, batch["hp"], batch["y"], batch["mask"],
+                        batch["t_norm"], cfg)
+    nll = gaussian_nll(mu, sigma, batch["target"].astype(mu.dtype))
+    mask = batch["mask"].astype(mu.dtype)
+    w = mask * cfg.obs_loss_weight + (1.0 - mask)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+# --------------------------------------------------------------------------
+# model + convenience prediction
+# --------------------------------------------------------------------------
+def build_curve_model(cfg: CurveTransformerConfig) -> CurveModel:
+    table = param_table(cfg)
+    return CurveModel(
+        cfg=cfg, param_table=table, logical=table_logical(table),
+        init=lambda key, dtype=cfg.dtype: build_params(key, table, dtype),
+        loss=lambda p, b, constrain=None: curve_loss(p, b, cfg),
+        predict=lambda p, hp, y, mask, t_norm: forward(p, hp, y, mask,
+                                                       t_norm, cfg),
+    )
+
+
+def predict_task(params, cfg: CurveTransformerConfig, X, t, Y, mask):
+    """One amortized forward pass over a task; returns np (mean, var), (n, m)."""
+    mu, sigma = jax.jit(forward, static_argnums=5)(
+        params, jnp.asarray(X), jnp.asarray(Y), jnp.asarray(mask),
+        normalize_t(jnp.asarray(t)), cfg)
+    return np.asarray(mu, np.float64), np.asarray(sigma, np.float64) ** 2

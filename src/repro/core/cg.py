@@ -63,7 +63,12 @@ def cg_solve(A: Callable[[jnp.ndarray], jnp.ndarray], b: jnp.ndarray,
         return (x, r, p, rs_new, it + 1)
 
     x, r, _, rs, it = jax.lax.while_loop(cond, body, state0)
-    return CGResult(x=x, iters=it, rel_residual=jnp.sqrt(rs) / safe_b_norm)
+    # Report the TRUE final residual ||b - Ax|| / ||b||, not the recursively
+    # updated one: on ill-conditioned systems the recursion drifts (it can
+    # report convergence the solution never reached).
+    r_true = b - A(x)
+    return CGResult(x=x, iters=it,
+                    rel_residual=jnp.sqrt(_dot(r_true, r_true)) / safe_b_norm)
 
 
 def pcg_solve(A: Callable, b: jnp.ndarray, M_inv: Callable,
@@ -71,7 +76,9 @@ def pcg_solve(A: Callable, b: jnp.ndarray, M_inv: Callable,
     """Preconditioned CG on packed vectors (..., N).
 
     ``M_inv`` approximates A^{-1} (see core.precond for the pivoted-Cholesky
-    preconditioner). Convergence criterion matches cg_solve (true residual).
+    preconditioner). The stopping rule monitors the unpreconditioned
+    (recursively updated) residual, matching cg_solve; the *reported*
+    ``rel_residual`` is the true final residual ``||b - Ax|| / ||b||``.
     """
     x0 = jnp.zeros_like(b)
     b_norm = jnp.sqrt(jnp.sum(b * b, axis=-1))
@@ -100,5 +107,6 @@ def pcg_solve(A: Callable, b: jnp.ndarray, M_inv: Callable,
 
     x, r, _, _, _, it = jax.lax.while_loop(cond, body,
                                            (x0, r0, z0, z0, rz0, jnp.int32(0)))
-    rel = jnp.sqrt(jnp.sum(r * r, axis=-1)) / safe
+    r_true = b - A(x)
+    rel = jnp.sqrt(jnp.sum(r_true * r_true, axis=-1)) / safe
     return CGResult(x=x, iters=it, rel_residual=rel)

@@ -26,19 +26,28 @@ class LBFGSResult(NamedTuple):
 
 
 def _two_loop(g, s_list, y_list):
-    """H * g via the standard two-loop recursion."""
+    """H * g via the standard two-loop recursion.
+
+    Pairs with non-positive curvature ``y.s <= 0`` (or non-finite products)
+    are skipped — the standard skip rule. Clamping them instead would turn a
+    curvature violation into ``rho ~ 1/eps`` and an exploding direction.
+    """
+    pairs = []
+    for s, y in zip(s_list, y_list):
+        ys = float(np.dot(y, s))
+        if np.isfinite(ys) and ys > 0:
+            pairs.append((s, y, 1.0 / ys))
     q = g.copy()
     alphas = []
-    rhos = [1.0 / max(float(np.dot(y, s)), 1e-300) for s, y in zip(s_list, y_list)]
-    for s, y, rho in zip(reversed(s_list), reversed(y_list), reversed(rhos)):
+    for s, y, rho in reversed(pairs):
         a = rho * float(np.dot(s, q))
         alphas.append(a)
         q -= a * y
-    if s_list:
-        s, y = s_list[-1], y_list[-1]
+    if pairs:
+        s, y, _ = pairs[-1]
         gamma = float(np.dot(s, y)) / max(float(np.dot(y, y)), 1e-300)
         q *= gamma
-    for (s, y, rho), a in zip(zip(s_list, y_list, rhos), reversed(alphas)):
+    for (s, y, rho), a in zip(pairs, reversed(alphas)):
         b = rho * float(np.dot(y, q))
         q += (a - b) * s
     return q
@@ -76,13 +85,21 @@ def _wolfe_line_search(fg, x, f0, g0, d, c1=1e-4, c2=0.9, max_evals=25):
         a_prev, f_prev, dg_prev = a, f, dg
         a = min(2.0 * a, a_max)
     else:
-        return (a, f, g), evals  # best effort
+        # Best effort: only hand back a finite decrease; a non-finite f here
+        # would poison the (s, y) pair and the next iterate. (f, g) belong to
+        # a_prev — the loop body doubles `a` past the last evaluated point.
+        if np.isfinite(f) and f < f0 and a_prev > 0:
+            return (a_prev, f, g), evals
+        return None, evals
 
     # zoom
+    best = None
     for _ in range(max_evals):
         a = 0.5 * (lo + hi)
         f, g, dg = phi(a)
         evals += 1
+        if np.isfinite(f) and f < f0 and (best is None or f < best[1]):
+            best = (a, f, g)
         if not np.isfinite(f) or f > f0 + c1 * a * dg0 or f >= f_lo:
             hi = a
         else:
@@ -93,7 +110,7 @@ def _wolfe_line_search(fg, x, f0, g0, d, c1=1e-4, c2=0.9, max_evals=25):
             lo, f_lo, dg_lo = a, f, dg
         if abs(hi - lo) < 1e-14:
             break
-    return (a, f, g), evals
+    return best, evals  # best finite decrease seen, or None (caller resets)
 
 
 def lbfgs_minimize(value_and_grad: Callable, x0, max_iters: int = 100,

@@ -35,9 +35,11 @@ def main(argv=None):
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
     mesh = make_mesh_from_args(args)
+    # Only VLM configs carry patch tokens; anything else (including ad-hoc
+    # config objects) contributes 0 to the cache length.
+    num_patch = getattr(cfg, "num_patch_tokens", 0) or 0
     serve = make_serve_steps(model, mesh,
-                             max_len=args.prompt_len + args.gen
-                             + cfg.num_patch_tokens)
+                             max_len=args.prompt_len + args.gen + num_patch)
     with mesh:
         params = jax.jit(model.init,
                          out_shardings=serve["param_shardings"])(

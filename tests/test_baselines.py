@@ -1,0 +1,134 @@
+"""Transformer curve-prediction baseline: model, pretrain, eval harness."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import (CurveTransformerConfig, PretrainConfig,
+                             build_curve_model, curve_loss, cutoff_masks,
+                             eval_transformer, forward, gaussian_nll,
+                             head_to_head, normalize_t, pretrain,
+                             sample_stream_batch, score_predictions)
+from repro.core import LKGPConfig
+from repro.data import sample_suite, sample_task
+
+TINY = CurveTransformerConfig(d_model=16, num_layers=1, num_heads=2, d_ff=32)
+
+
+def _params(cfg=TINY, seed=0):
+    return build_curve_model(cfg).init(jax.random.PRNGKey(seed))
+
+
+def _arrays(n=5, m=8, d=7, seed=0):
+    task = sample_task(seed, n=n, m=m, d=d)
+    return (jnp.asarray(task.X), jnp.asarray(task.Y),
+            jnp.asarray(task.mask), normalize_t(jnp.asarray(task.t)), task)
+
+
+def test_forward_shapes_and_finiteness():
+    X, Y, mask, t_norm, _ = _arrays()
+    mu, sigma = forward(_params(), X, Y, mask, t_norm, TINY)
+    assert mu.shape == Y.shape and sigma.shape == Y.shape
+    assert np.all(np.isfinite(np.asarray(mu)))
+    assert np.all(np.asarray(sigma) > TINY.min_sigma * 0.99)
+
+
+def test_predictions_ignore_masked_out_values():
+    """The explicit missing-value mask must gate the inputs: values at
+    unobserved cells cannot influence any prediction."""
+    X, Y, mask, t_norm, _ = _arrays(seed=1)
+    params = _params()
+    mu1, sig1 = forward(params, X, Y, mask, t_norm, TINY)
+    Y_garbage = jnp.where(mask > 0, Y, 1e6)   # rewrite hidden cells only
+    mu2, sig2 = forward(params, X, Y_garbage, mask, t_norm, TINY)
+    np.testing.assert_array_equal(np.asarray(mu1), np.asarray(mu2))
+    np.testing.assert_array_equal(np.asarray(sig1), np.asarray(sig2))
+
+
+def test_gaussian_nll_is_correct():
+    mu, sigma, y = jnp.asarray(0.3), jnp.asarray(0.5), jnp.asarray(0.8)
+    got = float(gaussian_nll(mu, sigma, y))
+    ref = -float(jax.scipy.stats.norm.logpdf(y, mu, sigma))
+    np.testing.assert_allclose(got, ref, rtol=1e-6)
+
+
+def test_curve_loss_weights_observed_vs_continuation():
+    X, Y, mask, t_norm, task = _arrays(seed=2)
+    batch = {"hp": X, "y": Y, "mask": mask, "t_norm": t_norm,
+             "target": jnp.asarray(task.Y_full)}
+    loss = float(curve_loss(_params(), batch, TINY))
+    assert np.isfinite(loss)
+    grads = jax.grad(lambda p: curve_loss(p, batch, TINY))(_params())
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(l))) for l in leaves)
+
+
+def test_stream_batch_curriculum_anneals_prefix_floor():
+    cfg = PretrainConfig(steps=100, tasks_per_step=2, n=6, m=8)
+    early = sample_stream_batch(cfg, 0)
+    late = sample_stream_batch(cfg, 99)
+    assert early["y"].shape == (12, 8) and early["hp"].shape == (12, 7)
+    # early curriculum shows longer observed prefixes on average
+    assert early["mask"].mean() > late["mask"].mean()
+
+
+def test_pretrain_reduces_nll():
+    cfg = PretrainConfig(steps=40, tasks_per_step=2, n=6, m=8, log_every=0)
+    params, info = pretrain(TINY, cfg, out=lambda *a, **k: None)
+    assert info["final_loss"] < info["first_loss"], info
+    leaves = jax.tree_util.tree_leaves(params)
+    assert all(np.all(np.isfinite(np.asarray(l, np.float32))) for l in leaves)
+
+
+def test_cutoff_masks_identical_and_anchored():
+    task = sample_task(5, n=8, m=10)
+    masks = cutoff_masks(task, (0.2, 0.5), seed=3)
+    again = cutoff_masks(task, (0.2, 0.5), seed=3)
+    for f in (0.2, 0.5):
+        np.testing.assert_array_equal(masks[f], again[f])  # deterministic
+        lens = masks[f].sum(axis=1)
+        assert lens.max() == 10                 # one fully-observed anchor
+        assert (lens == max(1, round(f * 10))).sum() >= 7
+
+
+def test_score_predictions_oracle():
+    """A perfect oracle scores ~zero MAE and perfect rank correlation."""
+    task = sample_task(7, n=10, m=9)
+    mask = cutoff_masks(task, (0.3,), seed=0)[0.3]
+    s = score_predictions(task.Y_full, np.full_like(task.Y_full, 1e-4),
+                          task, mask)
+    assert s["mae"] < 1e-12
+    assert s["rank_corr"] > 0.999
+    worse = score_predictions(task.Y_full * 0 + task.Y_full.mean(),
+                              np.full_like(task.Y_full, 1e-4), task, mask)
+    assert worse["mae"] > s["mae"]
+    assert worse["nll"] > s["nll"]
+
+
+def test_head_to_head_rows_structure():
+    params = _params()
+    tasks = sample_suite(31, 1, n=6, m=8, d=7)
+    rows = head_to_head(params, TINY, tasks, cutoffs=(0.25, 0.5),
+                        gp_cfg=LKGPConfig(lbfgs_iters=2), seed=0)
+    assert len(rows) == 2 * 2                  # 2 cutoffs x 2 models
+    models = {r["model"] for r in rows}
+    assert models == {"lkgp", "transformer"}
+    for r in rows:
+        for k in ("nll", "mae", "rank_corr", "fit_s", "predict_s"):
+            assert np.isfinite(r[k]), r
+    # amortized model: no per-task fit cost
+    assert all(r["fit_s"] == 0.0 for r in rows if r["model"] == "transformer")
+
+
+def test_eval_transformer_uses_only_masked_inputs():
+    """The harness must not leak hidden cells into the transformer input."""
+    params = _params()
+    task = sample_task(41, n=6, m=8)
+    mask = cutoff_masks(task, (0.4,), seed=1)[0.4]
+    p1 = eval_transformer(params, TINY, task, mask)
+    leaked = task._replace(Y_full=np.where(mask > 0, task.Y_full, -7.0))
+    p2 = eval_transformer(params, TINY, leaked, mask)
+    np.testing.assert_array_equal(p1["mean"], p2["mean"])

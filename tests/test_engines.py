@@ -383,3 +383,42 @@ def test_fit_batch_broadcasts_t_and_stacks_transforms():
     assert batched.params.raw_x_lengthscale.shape == (B, d)
     s0 = unstack(batched)[0]
     assert s0.X.shape == (n, d)
+
+
+# --------------------------------------------------------------------------
+# Matheron consistency (alpha-reuse path; dense vs iterative engines)
+# --------------------------------------------------------------------------
+def test_matheron_sample_mean_converges_to_exact_mean_alpha_reuse():
+    """The empirical mean of Posterior.samples must converge to the exact
+    Posterior.mean: both share the cached alpha = K^{-1}(Y*mask), so the
+    Monte-Carlo error is the only gap and shrinks with the sample count."""
+    task = _small_task(seed=11)
+    state = fit(task.X, task.t, task.Y, task.mask, _tight_cfg())
+    post = posterior(state, engine=get_engine("iterative"))
+    mean = np.asarray(post.mean)
+
+    errs = []
+    for n_samples in (250, 4000):
+        s = post.samples(jax.random.PRNGKey(3), n_samples)
+        errs.append(float(np.max(np.abs(np.asarray(jnp.mean(s, 0)) - mean))))
+    assert errs[-1] < 0.12, errs
+    assert errs[-1] < errs[0], errs      # more samples -> closer to exact
+
+
+def test_matheron_samples_consistent_across_dense_and_iterative():
+    """With a tight CG tolerance, the same PRNG key must produce (near-)
+    identical Matheron samples through the dense and iterative engines —
+    on the observed cells in particular, where the conditioning acts."""
+    task = _small_task(seed=13)
+    state = fit(task.X, task.t, task.Y, task.mask, _tight_cfg(cg_tol=1e-10))
+    key = jax.random.PRNGKey(7)
+    s_dense = np.asarray(
+        posterior(state, engine=get_engine("dense")).samples(key, 16))
+    s_iter = np.asarray(
+        posterior(state, engine=get_engine("iterative")).samples(key, 16))
+
+    obs = np.asarray(task.mask) > 0
+    np.testing.assert_allclose(s_dense[:, obs], s_iter[:, obs],
+                               rtol=1e-6, atol=1e-6)
+    # full grid (incl. extrapolated cells) agrees to solver tolerance too
+    np.testing.assert_allclose(s_dense, s_iter, atol=1e-5)

@@ -1,0 +1,47 @@
+"""Serving-driver smoke: non-VLM archs must serve without VLM-only config
+fields (regression for the unconditional ``cfg.num_patch_tokens`` read)."""
+import numpy as np
+import pytest
+
+from repro.launch import serve as serve_mod
+
+
+def _serve_args(arch):
+    return ["--arch", arch, "--smoke", "--batch", "2",
+            "--prompt-len", "8", "--gen", "3"]
+
+
+def test_serve_smoke_rwkv():
+    """--arch rwkv6_1b6 --smoke end to end: prefill + greedy decode."""
+    gen = serve_mod.main(_serve_args("rwkv6_1b6"))
+    assert gen.shape == (2, 3)
+    assert np.issubdtype(gen.dtype, np.integer)
+
+
+class _NoPatchCfg:
+    """Config proxy without the VLM-only ``num_patch_tokens`` attribute."""
+
+    def __init__(self, cfg):
+        object.__setattr__(self, "_cfg", cfg)
+
+    def __getattr__(self, name):
+        if name == "num_patch_tokens":
+            raise AttributeError(name)
+        return getattr(self._cfg, name)
+
+
+def test_serve_smoke_without_num_patch_tokens(monkeypatch):
+    """A config object that simply lacks the VLM field must still serve."""
+    from repro.configs import get_smoke_config
+
+    real = get_smoke_config("rwkv6_1b6")
+    monkeypatch.setattr(serve_mod, "get_smoke_config",
+                        lambda arch: _NoPatchCfg(real))
+    gen = serve_mod.main(_serve_args("rwkv6_1b6"))
+    assert gen.shape == (2, 3)
+
+
+def test_serve_smoke_vlm_counts_patch_tokens():
+    """The VLM path still reserves cache room for its patch-token prefix."""
+    gen = serve_mod.main(_serve_args("llava_next_mistral_7b"))
+    assert gen.shape == (2, 3)

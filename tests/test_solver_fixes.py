@@ -1,0 +1,151 @@
+"""Solver correctness regressions: CG true-residual reporting and L-BFGS
+curvature handling (both fail on the pre-fix code)."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cg_solve, lbfgs_minimize, pcg_solve
+from repro.core.lbfgs import _two_loop, _wolfe_line_search
+
+
+def _ill_conditioned(N: int, cond_exp: float, seed: int = 0):
+    """Dense SPD matrix with eigenvalues logspace(0, -cond_exp)."""
+    rng = np.random.default_rng(seed)
+    Q, _ = np.linalg.qr(rng.standard_normal((N, N)))
+    lam = np.logspace(0.0, -cond_exp, N)
+    return Q @ np.diag(lam) @ Q.T, rng
+
+
+# --------------------------------------------------------------------------
+# cg.py: reported rel_residual must be the TRUE residual ||b - Ax|| / ||b||
+# --------------------------------------------------------------------------
+def test_cg_reports_true_residual_on_ill_conditioned_system():
+    """On cond ~ 1e10 the recursively-updated residual claims ~1e-10 while
+    the true residual stalls near 1e-8 (300x drift); the reported value
+    must be the true one, verified against a direct dense recompute."""
+    n, m = 8, 5
+    M, rng = _ill_conditioned(n * m, 10.0)
+    Mj = jnp.asarray(M)
+    A = lambda u: (Mj @ u.reshape(*u.shape[:-2], n * m)[..., None]
+                   )[..., 0].reshape(u.shape)
+    b = jnp.asarray(rng.standard_normal((n, m)))
+
+    res = cg_solve(A, b, tol=1e-10, max_iters=5000)
+    true_rel = float(np.linalg.norm(np.asarray(b - A(res.x)))
+                     / np.linalg.norm(np.asarray(b)))
+    np.testing.assert_allclose(float(res.rel_residual), true_rel, rtol=1e-9)
+    # The drift this guards against: the true residual genuinely stalls
+    # above the requested tol of 1e-10 on this system (observed ~3e-8; the
+    # pre-fix recursive estimate claimed ~9e-11). Loose bound — the exact
+    # stall level varies with BLAS/arch rounding.
+    assert true_rel > 5e-10, true_rel
+
+
+def test_cg_true_residual_matches_dense_solve_error():
+    """The reported residual must track the actual error vs a dense solve."""
+    n, m = 6, 4
+    M, rng = _ill_conditioned(n * m, 8.0, seed=1)
+    Mj = jnp.asarray(M)
+    A = lambda u: (Mj @ u.reshape(-1)).reshape(n, m)
+    b_np = rng.standard_normal((n, m))
+    b = jnp.asarray(b_np)
+
+    res = cg_solve(A, b, tol=1e-8, max_iters=10_000)
+    x_dense = np.linalg.solve(M, b_np.reshape(-1)).reshape(n, m)
+    # residual implied by the dense reference at the CG solution
+    implied = np.linalg.norm(M @ (np.asarray(res.x) - x_dense).reshape(-1)) \
+        / np.linalg.norm(b_np)
+    # the dense reference itself carries O(cond * eps) error, so compare
+    # loosely — the pre-fix recursive estimate is >2x off here.
+    np.testing.assert_allclose(float(res.rel_residual), implied, rtol=0.05)
+
+
+def test_pcg_reports_true_residual():
+    """pcg_solve's docstring promise ('true residual') must hold."""
+    N = 40
+    M, rng = _ill_conditioned(N, 10.0, seed=2)
+    Mj = jnp.asarray(M)
+    A = lambda u: (Mj @ u[..., None])[..., 0]
+    d_inv = jnp.asarray(1.0 / np.diag(M))
+    M_inv = lambda r: r * d_inv
+    b = jnp.asarray(rng.standard_normal(N))
+
+    res = pcg_solve(A, b, M_inv, tol=1e-10, max_iters=5000)
+    true_rel = float(np.linalg.norm(np.asarray(b - A(res.x)))
+                     / np.linalg.norm(np.asarray(b)))
+    np.testing.assert_allclose(float(res.rel_residual), true_rel, rtol=1e-9)
+
+
+# --------------------------------------------------------------------------
+# lbfgs.py: curvature-violating pairs and non-finite line-search returns
+# --------------------------------------------------------------------------
+def test_two_loop_skips_nonpositive_curvature_pairs():
+    """A stored pair with y.s < 0 must be skipped, not clamped to
+    rho ~ 1e300 (which explodes the search direction)."""
+    g = np.array([1.0, 2.0])
+    s = [np.array([1e-3, 0.0])]
+    y = [np.array([-1.0, 0.0])]          # y.s = -1e-3 < 0
+    d = _two_loop(g, s, y)
+    assert np.all(np.isfinite(d))
+    # with the only pair skipped, the direction is plain gradient scaling
+    np.testing.assert_allclose(d, g)
+
+    # a healthy pair mixed with a violating one: result stays bounded
+    s2 = [np.array([1.0, 0.0]), np.array([1e-3, 0.0])]
+    y2 = [np.array([0.5, 0.0]), np.array([-1.0, 0.0])]
+    d2 = _two_loop(g, s2, y2)
+    assert np.all(np.isfinite(d2)) and np.max(np.abs(d2)) < 1e3, d2
+
+
+def test_wolfe_line_search_never_returns_nonfinite_f():
+    """Objective finite only at the start: every trial step is +inf. The
+    best-effort return must be a failure (None), not an inf iterate."""
+    x0 = np.array([-1.0])
+
+    def fg(x):
+        if x[0] > -1.0 + 1e-12:
+            return np.inf, np.array([np.nan])
+        return float(x[0] ** 2), 2.0 * x
+
+    f0, g0 = fg(x0)
+    d = -g0                               # descent direction into the wall
+    res, evals = _wolfe_line_search(fg, x0, f0, g0, d)
+    assert evals > 0
+    if res is not None:
+        assert np.isfinite(res[1]) and res[1] < f0
+
+
+def test_lbfgs_survives_objective_with_nonfinite_wall():
+    """Pre-fix, the best-effort line search hands back f=inf and the
+    optimizer walks into it (final fun=inf/nan); post-fix it fails the
+    search, resets, and returns the last finite iterate."""
+    def value_and_grad(x):
+        x = np.asarray(x, np.float64)
+        if x[0] > -1.0 + 1e-12:
+            return np.inf, np.full_like(x, np.nan)
+        return float(x[0] ** 2), 2.0 * x
+
+    res = lbfgs_minimize(value_and_grad, np.array([-1.0]), max_iters=20)
+    assert np.isfinite(res.fun), res
+    assert np.all(np.isfinite(res.x))
+    np.testing.assert_allclose(res.x, [-1.0])   # never moved into the wall
+
+
+def test_lbfgs_minimizes_nonconvex_objective():
+    """Non-convex objective with curvature-violating steps: finite result
+    at a stationary point."""
+    def value_and_grad(x):
+        x = np.asarray(x, np.float64)
+        f = float(np.sum(np.sin(3.0 * x) + 0.5 * x ** 2))
+        g = 3.0 * np.cos(3.0 * x) + x
+        return f, g
+
+    for x0 in ([2.0, -1.5], [0.3, 0.7], [-3.0, 3.0]):
+        res = lbfgs_minimize(value_and_grad, np.asarray(x0), max_iters=200,
+                             gtol=1e-8)
+        assert np.isfinite(res.fun)
+        _, g = value_and_grad(res.x)
+        assert np.max(np.abs(g)) < 1e-5, (x0, res)
