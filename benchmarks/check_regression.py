@@ -17,7 +17,13 @@ Fails (exit 1) when
   reduces CG iterations), or
 * any acceptance claim measured by ``bench_curve_pred`` is false (the LKGP
   stays within the paper's "matches a Transformer" tolerance on NLL / MAE /
-  final-value rank correlation, on identical held-out suites).
+  final-value rank correlation, on identical held-out suites), or
+* any acceptance claim measured by ``bench_mvm`` is false: the fused
+  single-pass kernel must keep exact f32 parity with the jnp oracle AND
+  reduce cost_analysis bytes-accessed by >= 1.5x vs the committed
+  two-stage kernel, and the consolidated stacked solve must perform
+  strictly fewer operator sweeps (and column MVMs) per MLL/posterior
+  evaluation than the separate-solve path.
 
 The committed baseline was measured on a different machine than the CI
 runner, so raw wall times are not comparable. Timings are therefore
@@ -52,7 +58,8 @@ def _speed_reference(cells):
 
 
 def check(baseline: dict, backends: dict, automl: dict,
-          factor: float, curvepred: dict | None = None) -> list[str]:
+          factor: float, curvepred: dict | None = None,
+          mvm: dict | None = None) -> list[str]:
     failures = []
 
     base_cells = _backend_cells(baseline["backends"])
@@ -111,6 +118,25 @@ def check(baseline: dict, backends: dict, automl: dict,
                   f"mae {s['mae']} rank {s['rank_corr']}"
                   + (f" (baseline nll {base_s.get('nll')} "
                      f"mae {base_s.get('mae')})" if base_s else ""))
+
+    if mvm is not None:
+        for claim, value in mvm["acceptance"].items():
+            if value:
+                print(f"ok        mvm acceptance: {claim}")
+            else:
+                failures.append(f"CLAIM FAILED mvm acceptance: {claim}")
+        for row in mvm.get("kernel", []):
+            print(f"info      mvm kernel B={row['B']} n={row['n']} "
+                  f"m={row['m']}: bytes ratio {row['bytes_ratio']:.2f}x "
+                  f"(fused {row['fused_bytes']/1e6:.2f}MB vs two-stage "
+                  f"{row['two_stage_bytes']/1e6:.2f}MB), "
+                  f"f32 err {row['max_abs_err_f32']:.1e}")
+        s = mvm.get("solve")
+        if s:
+            print(f"info      mvm solve: stacked {s['stacked']['sweeps']} "
+                  f"sweeps / {s['stacked']['column_matvecs']} col-MVMs vs "
+                  f"separate {s['separate']['sweeps']} / "
+                  f"{s['separate']['column_matvecs']}")
     return failures
 
 
@@ -121,6 +147,8 @@ def main(argv=None) -> int:
     ap.add_argument("--automl", default="BENCH_automl.ci.json")
     ap.add_argument("--curvepred", default=None,
                     help="BENCH_curve_pred json to gate (omit to skip)")
+    ap.add_argument("--mvm", default=None,
+                    help="BENCH_mvm json to gate (omit to skip)")
     ap.add_argument("--factor", type=float, default=2.0)
     args = ap.parse_args(argv)
 
@@ -134,8 +162,12 @@ def main(argv=None) -> int:
     if args.curvepred:
         with open(args.curvepred) as f:
             curvepred = json.load(f)
+    mvm = None
+    if args.mvm:
+        with open(args.mvm) as f:
+            mvm = json.load(f)
 
-    failures = check(baseline, backends, automl, args.factor, curvepred)
+    failures = check(baseline, backends, automl, args.factor, curvepred, mvm)
     if failures:
         print("\n".join(["", "benchmark gate FAILED:"] + failures))
         return 1

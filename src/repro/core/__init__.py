@@ -15,16 +15,18 @@ Supporting numerics: grid-form CG (:mod:`~repro.core.cg`), stochastic
 Lanczos quadrature (:mod:`~repro.core.slq`), the latent-Kronecker MVM
 (:mod:`~repro.core.mvm`), Matheron sampling, transforms, and priors.
 """
-from .cg import CGResult, cg_solve, pcg_solve
+from .cg import CGResult, CGTridiag, cg_solve, cg_solve_tridiag, pcg_solve
 from .engines import (ENGINES, CustomMVMEngine, DenseEngine,
                       DistributedEngine, InferenceEngine, IterativeEngine,
-                      LatentKroneckerOperator, PallasEngine, get_engine,
-                      list_backends, make_mll, make_mll_iterative,
-                      mll_cholesky, register_engine)
+                      LatentKroneckerOperator, PallasEngine,
+                      StackedSolveResult, get_engine, list_backends,
+                      make_mll, make_mll_iterative, mll_cholesky,
+                      register_engine)
 from .gp_kernels import KERNELS_1D, matern12, matern32, matern52, rbf_ard
 from .lbfgs import LBFGSResult, lbfgs_minimize
 from .lkgp import LKGP
-from .matheron import sample_posterior_grid
+from .matheron import (kronecker_correction, prior_residual_draws,
+                       sample_posterior_grid)
 from .mvm import (grid_to_packed, joint_cov_packed, kron_dense, lk_mvm,
                   lk_operator, packed_to_grid)
 from .posterior import (BatchedPosterior, Posterior, joint_grams, posterior,
@@ -32,7 +34,8 @@ from .posterior import (BatchedPosterior, Posterior, joint_grams, posterior,
 from .precond import (pivoted_cholesky_grid, pivoted_cholesky_latent,
                       woodbury_preconditioner)
 from .priors import noise_prior_logpdf, x_lengthscale_prior_logpdf
-from .slq import lanczos, rademacher_probes, slq_logdet
+from .slq import (lanczos, rademacher_probes, slq_logdet,
+                  slq_logdet_from_tridiag, tridiag_from_cg)
 from .state import (GPData, LKGPConfig, LKGPParams, LKGPState, extend, fit,
                     fit_batch, gram_matrices, init_params, log_prior, refit,
                     resolve_backend, unstack)
@@ -40,12 +43,15 @@ from .transforms import TTransform, XTransform, YTransform
 
 __all__ = [
     # solvers / numerics
-    "CGResult", "cg_solve", "pcg_solve", "KERNELS_1D", "matern12", "matern32",
+    "CGResult", "CGTridiag", "cg_solve", "cg_solve_tridiag", "pcg_solve",
+    "KERNELS_1D", "matern12", "matern32",
     "matern52", "rbf_ard", "LBFGSResult", "lbfgs_minimize",
-    "sample_posterior_grid", "grid_to_packed", "joint_cov_packed",
+    "sample_posterior_grid", "prior_residual_draws", "kronecker_correction",
+    "grid_to_packed", "joint_cov_packed",
     "kron_dense", "lk_mvm", "lk_operator", "packed_to_grid",
     "noise_prior_logpdf", "x_lengthscale_prior_logpdf", "lanczos",
-    "rademacher_probes", "slq_logdet", "TTransform", "XTransform",
+    "rademacher_probes", "slq_logdet", "slq_logdet_from_tridiag",
+    "tridiag_from_cg", "TTransform", "XTransform",
     "YTransform", "pivoted_cholesky_grid", "pivoted_cholesky_latent",
     "woodbury_preconditioner",
     # state + functional API
@@ -56,7 +62,7 @@ __all__ = [
     "InferenceEngine", "ENGINES", "get_engine", "register_engine",
     "list_backends", "DenseEngine", "IterativeEngine", "PallasEngine",
     "DistributedEngine", "CustomMVMEngine", "LatentKroneckerOperator",
-    "make_mll", "make_mll_iterative", "mll_cholesky",
+    "StackedSolveResult", "make_mll", "make_mll_iterative", "mll_cholesky",
     # posterior + facade
     "Posterior", "posterior", "joint_grams", "LKGP",
     "BatchedPosterior", "posterior_batch",

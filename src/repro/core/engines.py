@@ -27,22 +27,22 @@ engines use the custom-VJP quadratic-form gradient trick (Gardner et al.,
 from __future__ import annotations
 
 import math
-from typing import Callable, Protocol, runtime_checkable
+from typing import Callable, NamedTuple, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
-from .cg import cg_solve, pcg_solve
+from .cg import CGResult, cg_solve, cg_solve_tridiag, pcg_solve
 from .mvm import kron_dense, lk_mvm
 from .precond import pivoted_cholesky_grid, woodbury_preconditioner
-from .slq import slq_logdet
+from .slq import slq_logdet, slq_logdet_from_tridiag, tridiag_from_cg
 from .state import GPData, LKGPConfig, LKGPParams, gram_matrices
 
 __all__ = [
     "InferenceEngine", "ENGINES", "register_engine", "get_engine",
     "list_backends", "DenseEngine", "IterativeEngine", "PallasEngine",
     "DistributedEngine", "CustomMVMEngine", "LatentKroneckerOperator",
-    "make_mll", "mll_cholesky", "make_mll_iterative",
+    "StackedSolveResult", "make_mll", "mll_cholesky", "make_mll_iterative",
 ]
 
 _LOG_2PI = math.log(2.0 * math.pi)
@@ -64,8 +64,11 @@ class InferenceEngine(Protocol):
         """Build A(u) from precomputed Gram matrices (posterior hot path)."""
         ...
 
-    def solve(self, A, b, config: LKGPConfig) -> jnp.ndarray:
-        """Solve A x = b; b may carry leading batch dimensions."""
+    def solve(self, A, b, config: LKGPConfig, x0=None) -> jnp.ndarray:
+        """Solve A x = b; b may carry leading batch dimensions.
+
+        ``x0`` optionally warm-starts iterative solves (scheduler refits).
+        """
         ...
 
     def logdet(self, A, data: GPData, config: LKGPConfig,
@@ -139,10 +142,11 @@ class DenseEngine:
     def operator_from_grams(self, K1, K2, mask, noise):
         return _DenseOperator(K1, K2, mask, noise)
 
-    def solve(self, A, b, config):
+    def solve(self, A, b, config, x0=None):
+        # x0 is accepted for interface uniformity; the exact solve ignores it.
         if not isinstance(A, _DenseOperator):
             return cg_solve(A, b, tol=config.cg_tol,
-                            max_iters=config.cg_max_iters).x
+                            max_iters=config.cg_max_iters, x0=x0).x
         L = A.chol()
         N = A.mask.size
         bb = (b * A.mask).reshape(-1, N)          # (batch, N)
@@ -187,6 +191,36 @@ class LatentKroneckerOperator:
         return self._precond[1]
 
 
+class StackedSolveResult(NamedTuple):
+    """One consolidated multi-RHS solve: solutions + (optional) log-det.
+
+    ``x`` are the stacked solutions; ``logdet`` is the SLQ estimate built
+    from the probe columns' CG-Lanczos tridiagonals (None when it could not
+    be fused, e.g. preconditioned solves — the preconditioned Krylov space
+    is M^{-1}A's, not A's); ``result`` carries the block solver's
+    per-column diagnostics (iterations, residuals, breakdown flags,
+    active-column MVM count).
+    """
+    x: jnp.ndarray
+    logdet: jnp.ndarray | None
+    result: CGResult
+
+
+def _stash_diagnostics(A, res: CGResult) -> None:
+    """Best-effort: hang the solve diagnostics on the operator object.
+
+    Operators are created per evaluation (and per trace), so the attribute
+    has the same lifetime as the solve it describes; eager callers
+    (:class:`repro.core.posterior.Posterior`) read it back as
+    ``A.last_result``. Plain-callable operators that reject attributes are
+    skipped silently.
+    """
+    try:
+        A.last_result = res
+    except AttributeError:
+        pass
+
+
 @register_engine("iterative")
 class IterativeEngine:
     exact = False
@@ -200,24 +234,71 @@ class IterativeEngine:
     def operator_from_grams(self, K1, K2, mask, noise):
         return LatentKroneckerOperator(K1, K2, mask, noise)
 
-    def solve(self, A, b, config):
+    def solve(self, A, b, config, x0=None):
+        return self.solve_result(A, b, config, x0=x0).x
+
+    def solve_result(self, A, b, config, x0=None) -> CGResult:
+        """Like :meth:`solve` but returning the full per-column diagnostics
+        (iterations, true residuals, breakdown flags, MVM counts)."""
         rank = getattr(config, "precond_rank", 0)
         if rank and isinstance(A, LatentKroneckerOperator):
-            return _precond_solve(A, b, config, rank).x
-        return cg_solve(A, b, tol=config.cg_tol,
-                        max_iters=config.cg_max_iters).x
+            res = _precond_solve(A, b, config, rank, x0=x0)
+        else:
+            res = cg_solve(A, b, tol=config.cg_tol,
+                           max_iters=config.cg_max_iters, x0=x0)
+        _stash_diagnostics(A, res)
+        return res
+
+    def solve_stacked(self, A, rhs, config, *, probe_cols: int = 0,
+                      subspace_dim=None, x0=None) -> StackedSolveResult:
+        """ONE batched operator sweep for a whole stack of right-hand sides.
+
+        ``rhs``: (s, n, m) stack (e.g. ``[y | probes | Matheron
+        residuals]``); every CG iteration applies the operator to the full
+        stack at once, converged columns freeze. When the trailing
+        ``probe_cols`` rows are SLQ probes, their CG-Lanczos tridiagonals
+        are recorded during the SAME solve and turned into the
+        log-determinant estimate — no separate Lanczos sweep.
+        """
+        rank = getattr(config, "precond_rank", 0)
+        if rank and isinstance(A, LatentKroneckerOperator):
+            res = _precond_solve(A, rhs, config, rank, x0=x0)
+            _stash_diagnostics(A, res)
+            return StackedSolveResult(x=res.x, logdet=None, result=res)
+        if probe_cols and x0 is not None:
+            # A warm start changes the Krylov starting vectors from the
+            # probes to rhs - A@x0, breaking the CG-Lanczos correspondence
+            # the fused log-det relies on; solve warm but report no logdet
+            # (the caller falls back to the separate SLQ pass).
+            probe_cols = 0
+        if probe_cols:
+            res, tri = cg_solve_tridiag(
+                A, rhs, max_rank=config.slq_iters, tol=config.cg_tol,
+                max_iters=config.cg_max_iters, x0=x0)
+            diag, off = tridiag_from_cg(tri.alphas[-probe_cols:],
+                                        tri.betas[-probe_cols:],
+                                        tri.steps[-probe_cols:])
+            logdet = slq_logdet_from_tridiag(diag, off, subspace_dim)
+        else:
+            res = cg_solve(A, rhs, tol=config.cg_tol,
+                           max_iters=config.cg_max_iters, x0=x0)
+            logdet = None
+        _stash_diagnostics(A, res)
+        return StackedSolveResult(x=res.x, logdet=logdet, result=res)
 
     def logdet(self, A, data, config, probes):
         return slq_logdet(A, probes, config.slq_iters, jnp.sum(data.mask))
 
 
-def _precond_solve(A: LatentKroneckerOperator, b, config, rank: int):
+def _precond_solve(A: LatentKroneckerOperator, b, config, rank: int,
+                   x0=None):
     """Preconditioned CG through the operator's Kronecker factors.
 
     Flattens grid-form vectors (..., n, m) onto (..., n*m) packed form,
     preconditions with the Woodbury-inverted rank-``rank`` pivoted Cholesky
-    of the masked latent covariance, and reshapes the solution back. All
-    pure jax, so it works under jit with a traced mask.
+    of the masked latent covariance, and reshapes the solution back. The
+    whole RHS stack shares one Woodbury apply per iteration. All pure jax,
+    so it works under jit with a traced mask.
     """
     n, m = A.mask.shape
     M_inv = A.preconditioner(rank)
@@ -225,8 +306,10 @@ def _precond_solve(A: LatentKroneckerOperator, b, config, rank: int):
     def A_flat(u):
         return A(u.reshape(*u.shape[:-1], n, m)).reshape(u.shape)
 
+    x0_flat = None if x0 is None else x0.reshape(*x0.shape[:-2], n * m)
     res = pcg_solve(A_flat, b.reshape(*b.shape[:-2], n * m), M_inv,
-                    tol=config.cg_tol, max_iters=config.cg_max_iters)
+                    tol=config.cg_tol, max_iters=config.cg_max_iters,
+                    x0=x0_flat)
     return res._replace(x=res.x.reshape(b.shape))
 
 
@@ -332,19 +415,22 @@ class DistributedEngine(IterativeEngine):
 
         return A
 
-    def solve(self, A, b, config):
+    def solve(self, A, b, config, x0=None):
         from ..distributed.lkgp_dist import dist_cg_solve
 
-        def one(bb):
+        def one(bb, x0b=None):
             x, _, _ = dist_cg_solve(A, bb, tol=config.cg_tol,
-                                    max_iters=config.cg_max_iters)
+                                    max_iters=config.cg_max_iters, x0=x0b)
             return x
 
         if b.ndim == 2:
-            return one(b)
+            return one(b, x0)
         # Per-system solves keep CG trip counts independent across the batch.
         flat = b.reshape((-1, *b.shape[-2:]))
-        return jax.lax.map(one, flat).reshape(b.shape)
+        if x0 is None:
+            return jax.lax.map(one, flat).reshape(b.shape)
+        x0f = jnp.broadcast_to(x0, b.shape).reshape(flat.shape)
+        return jax.lax.map(lambda args: one(*args), (flat, x0f)).reshape(b.shape)
 
 
 # --------------------------------------------------------------------------
@@ -406,10 +492,25 @@ def make_mll(config: LKGPConfig, engine: "InferenceEngine") -> Callable:
         A = _operator(params, X, t, mask)
         Ym = Y * mask
         rhs = jnp.concatenate([Ym[None], probes], axis=0)
-        sol = engine.solve(A, rhs, config)
-        alpha, W = sol[0], sol[1:]
         N = jnp.sum(mask)
-        logdet = engine.logdet(A, GPData(X, t, None, mask), config, probes)
+        # Consolidated path: ONE stacked block solve covers the mean solve,
+        # the trace-gradient probe solves, AND (via the probes' CG-Lanczos
+        # tridiagonals) the SLQ log-det — no separate Lanczos sweep. The
+        # fallback (slq_via_cg=False, engines without solve_stacked, or
+        # preconditioned solves whose Krylov space is M^{-1}A's) runs the
+        # classic stacked solve + reorthogonalised-Lanczos SLQ.
+        stacked = getattr(engine, "solve_stacked", None)
+        logdet = None
+        if stacked is not None and getattr(config, "slq_via_cg", True):
+            st = stacked(A, rhs, config, probe_cols=probes.shape[0],
+                         subspace_dim=N)
+            sol, logdet = st.x, st.logdet
+        else:
+            sol = engine.solve(A, rhs, config)
+        if logdet is None:
+            logdet = engine.logdet(A, GPData(X, t, None, mask), config,
+                                   probes)
+        alpha, W = sol[0], sol[1:]
         value = -0.5 * jnp.sum(Ym * alpha) - 0.5 * logdet - 0.5 * N * _LOG_2PI
         return value, (params, X, t, Y, mask, alpha, W, probes)
 

@@ -11,11 +11,14 @@
 * The correction is zero-padding -> Kronecker MVM -> evaluation at test rows:
   K1[joint, train] @ u @ K2.
 
-When a cached ``alpha = K^{-1}(Y * mask)`` is supplied (see
-:class:`repro.core.posterior.Posterior`), linearity splits the solve:
-``K^{-1}(Y - F - eps) = alpha - K^{-1}(F + eps)``, so only the (F + eps)
-part is solved per call and the sample mean is exactly consistent with the
-cached exact mean.
+The pieces are exposed separately (:func:`prior_residual_draws`,
+:func:`kronecker_correction`) so that :class:`repro.core.posterior.Posterior`
+can stack the Matheron residuals together with ``Y * mask`` into ONE
+multi-RHS block solve ``K^{-1}[y | residuals]`` — the cached
+``alpha = K^{-1}(Y * mask)`` and all samples then cost a single batched
+operator sweep, and by linearity (``K^{-1}(Y - F - eps) = alpha -
+K^{-1}(F + eps)``) the sample mean stays exactly consistent with the exact
+mean.
 """
 from __future__ import annotations
 
@@ -27,7 +30,39 @@ import jax.numpy as jnp
 from .cg import cg_solve
 from .mvm import lk_operator
 
-__all__ = ["sample_posterior_grid"]
+__all__ = ["sample_posterior_grid", "prior_residual_draws",
+           "kronecker_correction"]
+
+
+def prior_residual_draws(key, K1_joint: jnp.ndarray, K2: jnp.ndarray,
+                         n_train: int, noise, n_samples: int,
+                         jitter: float = 1e-6):
+    """Draw the Matheron prior part: joint-grid prior samples + noise.
+
+    Returns ``(F, eps)`` with ``F`` of shape (s, n+n*, m) — prior samples
+    over the full joint grid via the Kronecker factorisation — and ``eps``
+    of shape (s, n, m), the observation-noise draws on the training block.
+    The solve RHS is then ``mask * (F[:, :n] + eps)``.
+    """
+    dtype = K1_joint.dtype
+    na = K1_joint.shape[0]
+    m = K2.shape[0]
+    L1 = jnp.linalg.cholesky(K1_joint + jitter * jnp.eye(na, dtype=dtype))
+    L2 = jnp.linalg.cholesky(K2 + jitter * jnp.eye(m, dtype=dtype))
+
+    kz, ke = jax.random.split(key)
+    Z = jax.random.normal(kz, (n_samples, na, m), dtype)
+    # Prior samples on the joint grid: vec(F) ~ N(0, K1_joint (x) K2).
+    F = jnp.einsum("ij,sjm,km->sik", L1, Z, L2)
+    eps = jnp.sqrt(noise) * jax.random.normal(ke, (n_samples, n_train, m),
+                                              dtype)
+    return F, eps
+
+
+def kronecker_correction(K1_joint: jnp.ndarray, u: jnp.ndarray,
+                         K2: jnp.ndarray, n_train: int) -> jnp.ndarray:
+    """Matheron correction (k1(., X) (x) k2(., t)) P^T u == K1[:, :n] @ u @ K2."""
+    return jnp.einsum("aj,sjm,mk->sak", K1_joint[:, :n_train], u, K2)
 
 
 def sample_posterior_grid(key, K1_joint: jnp.ndarray, K2: jnp.ndarray,
@@ -48,19 +83,8 @@ def sample_posterior_grid(key, K1_joint: jnp.ndarray, K2: jnp.ndarray,
     Returns samples of shape (n_samples, n+n*, m); rows [:n] are posterior
     curves for the training configs (continuations), rows [n:] for test.
     """
-    dtype = K1_joint.dtype
-    na = K1_joint.shape[0]
-    m = K2.shape[0]
-    eye_a = jnp.eye(na, dtype=dtype)
-    eye_m = jnp.eye(m, dtype=dtype)
-    L1 = jnp.linalg.cholesky(K1_joint + jitter * eye_a)
-    L2 = jnp.linalg.cholesky(K2 + jitter * eye_m)
-
-    kz, ke = jax.random.split(key)
-    Z = jax.random.normal(kz, (n_samples, na, m), dtype)
-    # Prior samples on the joint grid: vec(F) ~ N(0, K1_joint (x) K2).
-    F = jnp.einsum("ij,sjm,km->sik", L1, Z, L2)
-    eps = jnp.sqrt(noise) * jax.random.normal(ke, (n_samples, n_train, m), dtype)
+    F, eps = prior_residual_draws(key, K1_joint, K2, n_train, noise,
+                                  n_samples, jitter)
 
     if solve is None:
         K1_tt = K1_joint[:n_train, :n_train]
@@ -74,9 +98,7 @@ def sample_posterior_grid(key, K1_joint: jnp.ndarray, K2: jnp.ndarray,
     if alpha is None:
         u = solve(mask * (Y[None] - F[:, :n_train, :] - eps))  # (s, n, m)
     else:
-        # Reuse the cached K^{-1}(Y*mask): solve only for the (F+eps) part.
+        # Reuse the cached K^{-1}(Y*mask): solve only for the (F + eps) part.
         u = alpha[None] - solve(mask * (F[:, :n_train, :] + eps))
 
-    # Correction: (k1(., X) (x) k2(., t)) P^T u  ==  K1[:, :n] @ u @ K2.
-    corr = jnp.einsum("aj,sjm,mk->sak", K1_joint[:, :n_train], u, K2)
-    return F + corr
+    return F + kronecker_correction(K1_joint, u, K2, n_train)

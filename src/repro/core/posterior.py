@@ -10,6 +10,14 @@ is computed once and cached, then shared between
   only solves for the (F + eps) part and reuses the cached ``alpha`` — the
   sample mean is exactly consistent with the exact mean.
 
+Solves are consolidated: if samples are requested before ``alpha`` exists,
+the posterior stacks ``[Y * mask | Matheron residuals]`` into ONE multi-RHS
+block solve, so a full posterior evaluation (``final()``: exact mean +
+Matheron variance) costs a single batched operator sweep instead of two.
+The block solver's per-column diagnostics (iterations, true residuals,
+breakdown flags) from the most recent solve are exposed as
+:attr:`Posterior.solve_info`.
+
 All solves go through the inference engine resolved from the state's
 config (or an explicitly provided engine), so the posterior path uses the
 same backend — dense, iterative, pallas, or distributed — as fitting.
@@ -24,7 +32,7 @@ import numpy as np
 
 from . import gp_kernels as gk
 from .engines import get_engine
-from .matheron import sample_posterior_grid
+from .matheron import kronecker_correction, prior_residual_draws
 from .mvm import kron_dense
 from .state import LKGPState, resolve_backend
 
@@ -74,6 +82,8 @@ class Posterior:
             n_obs = int(np.sum(np.asarray(state.mask)))
             engine = get_engine(resolve_backend(state.config, n_obs))
         self._engine = engine
+        self._alpha = None       # cached K^{-1}(Y * mask), grid form
+        self._solve_info = None  # CGResult of the most recent engine solve
 
     # -- cached pieces -----------------------------------------------------
     @cached_property
@@ -89,12 +99,28 @@ class Posterior:
         return self._engine.operator_from_grams(
             K1a[:n, :n], K2, self._state.mask, noise)
 
-    @cached_property
+    def _solve(self, rhs):
+        """Engine solve capturing the block solver's diagnostics."""
+        x = self._engine.solve(self._operator, rhs, self._state.config)
+        self._solve_info = getattr(self._operator, "last_result", None)
+        return x
+
+    @property
     def alpha(self):
         """Cached K^{-1} (Y * mask) in transformed space (grid form)."""
-        st = self._state
-        Ym = st.y_tf(st.Y) * st.mask
-        return self._engine.solve(self._operator, Ym, st.config)
+        if self._alpha is None:
+            st = self._state
+            Ym = st.y_tf(st.Y) * st.mask
+            self._alpha = self._solve(Ym)
+        return self._alpha
+
+    @property
+    def solve_info(self):
+        """Diagnostics (:class:`repro.core.cg.CGResult`) of the most recent
+        solve through this posterior — per-column iterations, true
+        residuals, and breakdown flags — or None before any solve (or for
+        engines that do not report them, e.g. the exact dense solve)."""
+        return self._solve_info
 
     # -- products ----------------------------------------------------------
     @property
@@ -106,17 +132,31 @@ class Posterior:
         return self._state.y_tf.inverse(mean_t)
 
     def samples(self, key, n_samples: int | None = None) -> jnp.ndarray:
-        """Matheron-rule posterior samples: (s, n(+n*), m), y units."""
+        """Matheron-rule posterior samples: (s, n(+n*), m), y units.
+
+        If ``alpha`` is not cached yet, ``[Y * mask | residuals]`` are
+        stacked into ONE multi-RHS block solve (a single batched operator
+        sweep yields the exact mean's alpha AND every sample); afterwards
+        samples reuse the cached alpha and only solve the residual part.
+        """
         st = self._state
         cfg = st.config
         n_samples = n_samples or cfg.posterior_samples
         K1a, K2 = self._grams
+        n = st.n
         noise = jnp.exp(st.params.raw_noise)
-        raw = sample_posterior_grid(
-            key, K1a, K2, st.n, st.y_tf(st.Y), st.mask, noise, n_samples,
-            jitter=cfg.jitter,
-            solve=lambda rhs: self._engine.solve(self._operator, rhs, cfg),
-            alpha=self.alpha)
+        F, eps = prior_residual_draws(key, K1a, K2, n, noise, n_samples,
+                                      jitter=cfg.jitter)
+        resid = st.mask * (F[:, :n, :] + eps)
+        if self._alpha is None:
+            Ym = st.y_tf(st.Y) * st.mask
+            sol = self._solve(jnp.concatenate([Ym[None], resid], axis=0))
+            self._alpha = sol[0]
+            u = sol[0][None] - sol[1:]
+        else:
+            # Linearity: K^{-1}(Y - F - eps) = alpha - K^{-1}(F + eps).
+            u = self._alpha[None] - self._solve(resid)
+        raw = F + kronecker_correction(K1a, u, K2, n)
         return st.y_tf.inverse(raw)
 
     @cached_property
@@ -138,13 +178,16 @@ class Posterior:
         samples plus observation noise — the Fig. 4 protocol.
         """
         st = self._state
-        mean = self.mean[:, -1]
+        # Samples first: on a fresh posterior this folds the alpha solve and
+        # the Matheron residual solves into ONE stacked operator sweep; the
+        # mean below then reads the alpha cached by that same solve.
         if key is None and n_samples is None:
             s = self._default_samples[:, :, -1]   # cached; same default key
         else:
             if key is None:
                 key = jax.random.PRNGKey(st.config.seed + 1)
             s = self.samples(key, n_samples)[:, :, -1]
+        mean = self.mean[:, -1]
         var_f = jnp.var(s, axis=0)
         var_y = var_f + st.y_tf.inverse_var(jnp.exp(st.params.raw_noise))
         return mean, var_y

@@ -13,7 +13,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-__all__ = ["lanczos", "slq_logdet", "rademacher_probes"]
+__all__ = ["lanczos", "slq_logdet", "slq_logdet_from_tridiag",
+           "tridiag_from_cg", "rademacher_probes"]
 
 
 def rademacher_probes(key, n_probes: int, mask: jnp.ndarray, dtype) -> jnp.ndarray:
@@ -78,4 +79,57 @@ def slq_logdet(A: Callable, probes: jnp.ndarray, num_iters: int,
         return jnp.sum(w0 * jnp.log(lam))
 
     quad = jax.vmap(per_probe)(alphas, betas)  # (p,)
+    return subspace_dim * jnp.mean(quad)
+
+
+def tridiag_from_cg(cg_alphas: jnp.ndarray, cg_betas: jnp.ndarray,
+                    steps: jnp.ndarray):
+    """Lanczos tridiagonal (diag, offdiag) from CG step coefficients.
+
+    The Krylov space CG explores from ``b`` is the Lanczos space of
+    ``v0 = b/||b||``, and the tridiagonal falls out of the CG (alpha, beta)
+    sequences (Saad 2003 §6.7; the mBCG trick of Gardner et al., 2018):
+
+        T[j, j]   = 1/alpha_j + beta_{j-1}/alpha_{j-1}        (beta_{-1}=0)
+        T[j, j+1] = sqrt(beta_j) / alpha_j
+
+    ``cg_alphas``/``cg_betas``: (..., k) per-system coefficient arrays;
+    ``steps``: (...,) number of valid entries per system. Entries at or
+    beyond ``steps`` are padded to an identity block (diag 1, offdiag 0):
+    the padding decouples from e1, so it contributes exactly log(1) = 0 to
+    the quadrature below.
+    """
+    k = cg_alphas.shape[-1]
+    idx = jnp.arange(k)
+    valid = idx < steps[..., None]
+    safe_a = jnp.where(valid & (cg_alphas > 0), cg_alphas, 1.0)
+    inv_a = 1.0 / safe_a
+    prev_ratio = jnp.zeros_like(cg_alphas).at[..., 1:].set(
+        cg_betas[..., :-1] / safe_a[..., :-1])
+    diag = jnp.where(valid, inv_a + prev_ratio, 1.0)
+    # offdiag j couples steps j and j+1; valid only when step j+1 exists.
+    off_valid = idx[:-1] < (steps[..., None] - 1)
+    off = jnp.where(off_valid,
+                    jnp.sqrt(jnp.maximum(cg_betas[..., :-1], 0.0))
+                    * inv_a[..., :-1], 0.0)
+    return diag, off
+
+
+def slq_logdet_from_tridiag(diag: jnp.ndarray, off: jnp.ndarray,
+                            subspace_dim) -> jnp.ndarray:
+    """log det estimate from per-probe Lanczos tridiagonals (p, k)/(p, k-1).
+
+    Same Gauss quadrature as :func:`slq_logdet`, but starting from
+    tridiagonal coefficients recovered from a (stacked) CG solve — the
+    probes' solves and the log-det then share ONE set of operator sweeps.
+    Assumes probes with squared norm == subspace_dim (masked Rademacher).
+    """
+    def per_probe(d, e):
+        T = jnp.diag(d) + jnp.diag(e, 1) + jnp.diag(e, -1)
+        lam, U = jnp.linalg.eigh(T)
+        lam = jnp.maximum(lam, 1e-30)  # guard breakdown zeros
+        w0 = U[0, :] ** 2
+        return jnp.sum(w0 * jnp.log(lam))
+
+    quad = jax.vmap(per_probe)(diag, off)  # (p,)
     return subspace_dim * jnp.mean(quad)

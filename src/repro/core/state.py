@@ -75,6 +75,11 @@ class LKGPConfig:
     precond_rank: int = 0           # >0: rank-r pivoted-Cholesky PCG (iterative/pallas)
     slq_probes: int = 16
     slq_iters: int = 25
+    # True: the MLL's log-det comes from the probe columns' CG-Lanczos
+    # tridiagonals of the ONE stacked solve K^{-1}[y | probes] (mBCG,
+    # Gardner et al. 2018) — no separate Lanczos operator sweeps. False
+    # restores the separate reorthogonalised-Lanczos SLQ pass.
+    slq_via_cg: bool = True
     jitter: float = 1e-6
     lbfgs_iters: int = 100
     posterior_samples: int = 64

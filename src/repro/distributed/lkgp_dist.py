@@ -57,12 +57,14 @@ def dist_lk_operator(mesh: Mesh, K1_rows, K2, mask, noise):
     return functools.partial(fn, K1_rows, K2, mask)
 
 
-def dist_cg_solve(A, b, tol=0.01, max_iters=10_000):
+def dist_cg_solve(A, b, tol=0.01, max_iters=10_000, x0=None):
     """CG on distributed grid vectors (the reductions are global jnp.sums,
-    which XLA lowers to psums over the sharded rows)."""
+    which XLA lowers to psums over the sharded rows). ``x0`` warm-starts
+    the solve (scheduler refits re-solve against a nearby operator)."""
     b_norm = jnp.sqrt(jnp.sum(b * b))
     safe = jnp.where(b_norm == 0, 1.0, b_norm)
-    x0 = jnp.zeros_like(b)
+    if x0 is None:
+        x0 = jnp.zeros_like(b)
     r0 = b - A(x0)
 
     def cond(state):

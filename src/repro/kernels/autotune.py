@@ -1,0 +1,144 @@
+"""Block-size autotuner for the fused latent-Kronecker MVM kernel.
+
+The fused kernel's best (block_n, block_m) depends on the grid shape: a
+block_n that covers n keeps the kernel in its single-K1-sweep regime (no
+stage-R recompute, every operand read once), while larger-than-needed
+blocks waste VMEM and padding FLOPs. The autotuner picks per-shape blocks
+from a small sweep over ``CANDIDATE_BLOCKS`` ({64, 128, 256}):
+
+* **timed mode** (default on TPU, or ``timed=True``): each candidate is
+  compiled and timed on a synthetic problem of the bucketed shape,
+  validated against the :mod:`repro.kernels.ref` oracle, and the fastest
+  valid candidate wins.
+* **heuristic mode** (default off-TPU, and always under ``jit`` tracing —
+  timing inside a trace is meaningless): the smallest candidate covering
+  each axis, i.e. the analytic single-sweep optimum.
+
+Results are cached per (n, m, B) power-of-two bucket (+ precision +
+backend), so the sweep runs once per shape family per process. The
+benchmark suite (``benchmarks/bench_mvm.py``) pre-fills the cache with
+timed results; later jitted traces reuse them via :func:`autotune_blocks`.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CANDIDATE_BLOCKS", "autotune_blocks", "clear_cache",
+           "cache_contents"]
+
+CANDIDATE_BLOCKS = (64, 128, 256)
+
+_CACHE: dict[tuple, tuple[int, int]] = {}
+
+
+def _bucket(x: int) -> int:
+    """Next power of two >= x (min 8): shapes in one bucket share blocks."""
+    b = 8
+    while b < x:
+        b *= 2
+    return b
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def cache_contents() -> dict:
+    return dict(_CACHE)
+
+
+def _heuristic(n: int, m: int) -> tuple[int, int]:
+    """Smallest candidate covering each axis (single-sweep regime)."""
+    bn = next((c for c in CANDIDATE_BLOCKS if c >= n), CANDIDATE_BLOCKS[-1])
+    bm = next((c for c in CANDIDATE_BLOCKS if c >= m), CANDIDATE_BLOCKS[-1])
+    return bn, bm
+
+
+def _candidate_pairs(n: int, m: int):
+    """Deduplicated candidate pairs after clamping to the padded shape."""
+    seen, pairs = set(), []
+    for bn in CANDIDATE_BLOCKS:
+        for bm in CANDIDATE_BLOCKS:
+            eff = (min(bn, _bucket(max(8, n))), min(bm, _bucket(max(8, m))))
+            if eff not in seen:
+                seen.add(eff)
+                pairs.append((bn, bm))
+    return pairs
+
+
+def _time_candidate(fn, args, reps: int = 3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def autotune_blocks(n: int, m: int, B: int = 1, *, precision: str = "f32",
+                    timed: bool | None = None,
+                    interpret: bool | None = None,
+                    atol: float = 1e-4) -> tuple[int, int]:
+    """Pick (block_n, block_m) for the fused kernel at shape (B, n, m).
+
+    ``timed=None`` resolves to True on TPU and False elsewhere. Timed
+    sweeps validate every candidate against the jnp oracle and skip any
+    that fail; a fully-failing sweep falls back to the heuristic. Safe to
+    call at ``jit`` trace time with ``timed=False`` (pure-python cache
+    lookup / heuristic — no compilation, no timing).
+    """
+    key = (_bucket(n), _bucket(m), _bucket(max(B, 1)), precision,
+           jax.default_backend())
+    hit = _CACHE.get(key)
+    if hit is not None:
+        return hit
+    if timed is None:
+        timed = jax.default_backend() == "tpu"
+    if not timed:
+        blocks = _heuristic(n, m)
+        _CACHE[key] = blocks
+        return blocks
+
+    # Import here: repro.kernels.lk_mvm has no dependency on this module,
+    # but keeping the top level import-light avoids cycles via ref.py.
+    from .lk_mvm import lk_mvm_fused
+    from .ref import lk_mvm_ref
+
+    nb, mb, Bb = key[0], key[1], key[2]
+    rng = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    A = jax.random.normal(k1, (nb, nb), jnp.float32)
+    K1 = A @ A.T / nb + 0.5 * jnp.eye(nb, dtype=jnp.float32)
+    C = jax.random.normal(k2, (mb, mb), jnp.float32)
+    K2 = C @ C.T / mb + 0.5 * jnp.eye(mb, dtype=jnp.float32)
+    mask = jnp.ones((nb, mb), jnp.float32)
+    u = jax.random.normal(k3, (Bb, nb, mb), jnp.float32)
+    ref = np.asarray(lk_mvm_ref(K1, K2, mask, u, 0.1))
+    scale = max(1.0, float(np.max(np.abs(ref))))
+
+    best, best_t = None, float("inf")
+    for bn, bm in _candidate_pairs(nb, mb):
+        def run(K1, K2, mask, u, _bn=bn, _bm=bm):
+            return lk_mvm_fused(K1, K2, mask, u, 0.1, block_n=_bn,
+                                block_m=_bm, precision=precision,
+                                interpret=interpret)
+        try:
+            out = np.asarray(run(K1, K2, mask, u))
+        except Exception:
+            continue
+        tol = atol * scale if precision == "f32" else 0.1 * scale
+        if not np.allclose(out, ref, atol=tol):
+            continue
+        t = _time_candidate(run, (K1, K2, mask, u))
+        if t < best_t:
+            best, best_t = (bn, bm), t
+    if best is None:
+        best = _heuristic(n, m)
+    _CACHE[key] = best
+    return best

@@ -1,20 +1,40 @@
-"""Pallas TPU kernel: masked latent-Kronecker MVM.
+"""Pallas TPU kernels: masked latent-Kronecker MVM.
 
 Computes   out = mask * (K1 @ (mask * U) @ K2) + noise * (mask * U)
 
-as two fused masked matmuls. This is the inner loop of every CG iteration in
-the paper (Section 2): on GPU/GPyTorch it is two cuBLAS calls plus separate
-elementwise masking kernels, i.e. four full HBM round-trips of the (B, n, m)
-intermediate. Here each stage applies the mask on load/store inside VMEM, so
-the intermediate touches HBM exactly once, and blocks are 128-aligned for the
-MXU.
+This is the inner loop of every CG iteration in the paper (Section 2): on
+GPU/GPyTorch it is two cuBLAS calls plus separate elementwise masking
+kernels, i.e. four full HBM round-trips of the (B, n, m) intermediate.
 
-Stage R (right):  T   = (mask * U) @ K2          grid (B, n/bn, m/bj, m/bk)
-Stage L (left):   out = mask * (K1 @ T) + noise * (mask * U)
-                                                 grid (B, n/bi, m/bj, n/bk)
+Two implementations live here:
 
-Accumulation runs over the innermost grid axis into an f32 VMEM scratch;
-the epilogue applies mask and the noise term on the final k step.
+:func:`lk_mvm_fused` (the default behind :func:`lk_mvm_pallas`)
+    ONE ``pallas_call``. Grid (B, n-rows, m-cols) with an inner K1-row
+    sweep; each step recomputes the per-block-row tile
+    ``T = (mask * U)[k, :] @ K2[:, j]`` straight into VMEM scratch and
+    accumulates ``K1[i, k] @ T`` — the (B, n, m) f32 intermediate NEVER
+    touches HBM. The noise/mask epilogue tiles are sliced out of the
+    already-resident row strips when the sweep passes k == i, so the fused
+    kernel reads each operand exactly once per grid step. The recompute
+    factor on the cheap first product is n/block_n on its O(n m^2) term —
+    for learning-curve grids (m << n, m <~ block) this is bounded by the
+    O(n^2 m) second product, while HBM traffic drops by the full
+    intermediate round-trip. Supports a bf16-inputs / f32-accumulate mode
+    (``precision="bf16"``); block sizes come from
+    :mod:`repro.kernels.autotune` when not given explicitly.
+    VMEM per step is O(block_n * m + m * block_m), so the fused kernel
+    targets the paper's regime m <~ 4096.
+
+:func:`lk_mvm_two_stage` (the committed baseline the benchmarks gate
+    against) — two ``pallas_call``s with the masked intermediate
+    materialised in HBM between them:
+
+    Stage R (right):  T   = (mask * U) @ K2        grid (B, n/bn, m/bj, m/bk)
+    Stage L (left):   out = mask * (K1 @ T) + noise * (mask * U)
+                                                   grid (B, n/bi, m/bj, n/bk)
+
+Accumulation always runs over the innermost grid axis into an f32 VMEM
+scratch; epilogues apply the mask and noise term on the final step.
 """
 from __future__ import annotations
 
@@ -25,7 +45,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["lk_mvm_pallas"]
+__all__ = ["lk_mvm_pallas", "lk_mvm_fused", "lk_mvm_two_stage"]
 
 
 def _stage_right_kernel(u_ref, mask_ref, k2_ref, o_ref, acc_ref, *, nk: int):
@@ -66,6 +86,45 @@ def _stage_left_kernel(k1_ref, t_ref, mask_ref, u_ref, noise_ref, o_ref,
         o_ref[0] = out.astype(o_ref.dtype)
 
 
+def _fused_kernel(k1_ref, u_ref, mask_ref, k2_ref, noise_ref, o_ref,
+                  acc_ref, epi_mask_ref, epi_u_ref, *, nk: int, bm: int,
+                  compute_dtype):
+    """Single-pass out[b, i, j] = mask*(sum_k K1[i,k] @ ((mask*U)[k,:]@K2[:,j]))
+    + noise * mask * U, with T tiles living only in VMEM."""
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Stage-R tile for block-row k, computed straight into registers/VMEM:
+    # (bn, m) x (m, bm) — the full m sweep in one MXU pass.
+    um = (u_ref[0] * mask_ref[...]).astype(compute_dtype)
+    t = jax.lax.dot(um, k2_ref[...].astype(compute_dtype),
+                    preferred_element_type=jnp.float32)
+    acc_ref[...] += jax.lax.dot(k1_ref[...].astype(compute_dtype),
+                                t.astype(compute_dtype),
+                                preferred_element_type=jnp.float32)
+
+    # The epilogue needs mask/U at block (i, j); the k-sweep's row strips
+    # contain exactly those tiles when k == i — slice them out of VMEM
+    # instead of fetching them from HBM again.
+    @pl.when(k == i)
+    def _capture():
+        off = pl.multiple_of(j * bm, bm)
+        epi_mask_ref[...] = mask_ref[:, pl.ds(off, bm)].astype(jnp.float32)
+        epi_u_ref[...] = u_ref[0, :, pl.ds(off, bm)].astype(jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        msk = epi_mask_ref[...]
+        noise = noise_ref[0, 0]
+        out = msk * acc_ref[...] + noise * (msk * epi_u_ref[...])
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
 def _pad_to(x, mults):
     pads = [(0, (-s) % mult) for s, mult in zip(x.shape, mults)]
     if all(p == (0, 0) for p in pads):
@@ -74,13 +133,16 @@ def _pad_to(x, mults):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
-def lk_mvm_pallas(K1: jnp.ndarray, K2: jnp.ndarray, mask: jnp.ndarray,
-                  u: jnp.ndarray, noise=0.0, *, block_n: int = 128,
-                  block_m: int = 128, interpret: bool | None = None) -> jnp.ndarray:
-    """Masked Kronecker MVM. u: (..., n, m) -> same shape.
+def lk_mvm_two_stage(K1: jnp.ndarray, K2: jnp.ndarray, mask: jnp.ndarray,
+                     u: jnp.ndarray, noise=0.0, *, block_n: int = 128,
+                     block_m: int = 128,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Two-stage masked Kronecker MVM (HBM-materialised intermediate).
 
-    Zero-padding to block multiples is harmless: padded rows/cols of mask are
-    zero, K2/K1 padding contributes zero partial products.
+    Kept as the benchmark baseline for the fused kernel; u: (..., n, m) ->
+    same shape. Zero-padding to block multiples is harmless: padded
+    rows/cols of mask are zero, K2/K1 padding contributes zero partial
+    products.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -134,3 +196,87 @@ def lk_mvm_pallas(K1: jnp.ndarray, K2: jnp.ndarray, mask: jnp.ndarray,
     )(K1p, t, maskp, up, noise_arr)
 
     return out[:, :n, :m].reshape(*batch_shape, n, m)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m",
+                                             "precision", "interpret"))
+def lk_mvm_fused(K1: jnp.ndarray, K2: jnp.ndarray, mask: jnp.ndarray,
+                 u: jnp.ndarray, noise=0.0, *, block_n: int = 128,
+                 block_m: int = 128, precision: str = "f32",
+                 interpret: bool | None = None) -> jnp.ndarray:
+    """Single-pass masked Kronecker MVM. u: (..., n, m) -> same shape.
+
+    One ``pallas_call``; the stage-R tile stays in VMEM scratch (see module
+    docstring). ``precision="bf16"`` casts the matmul inputs to bfloat16
+    and accumulates in f32 (the mask/noise epilogue stays f32); the output
+    keeps u's dtype. Zero-padding to block multiples is harmless: padded
+    rows/cols of mask are zero, K2/K1 padding contributes zero partial
+    products.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if precision not in ("f32", "bf16"):
+        raise ValueError(f"precision must be 'f32' or 'bf16', got {precision!r}")
+    compute_dtype = jnp.bfloat16 if precision == "bf16" else jnp.float32
+    n, m = mask.shape
+    batch_shape = u.shape[:-2]
+    u3 = u.reshape((-1, n, m))
+    B = u3.shape[0]
+    dtype = u.dtype
+
+    min_edge = 16 if precision == "bf16" else 8
+    bn = min(block_n, max(min_edge, n))
+    bm = min(block_m, max(min_edge, m))
+    if precision == "bf16":
+        K1 = K1.astype(jnp.bfloat16)
+        K2 = K2.astype(jnp.bfloat16)
+        u3 = u3.astype(jnp.bfloat16)
+        mask = mask.astype(jnp.bfloat16)   # exact: mask is 0/1
+    K1p = _pad_to(K1, (bn, bn))
+    K2p = _pad_to(K2, (bm, bm))
+    maskp = _pad_to(mask, (bn, bm))
+    up = _pad_to(u3, (1, bn, bm))
+    npad, mpad = maskp.shape
+    noise_arr = jnp.asarray(noise, jnp.float32).reshape(1, 1)
+
+    gn, gm, gkn = npad // bn, mpad // bm, npad // bn
+
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, nk=gkn, bm=bm,
+                          compute_dtype=compute_dtype),
+        grid=(B, gn, gm, gkn),
+        in_specs=[
+            pl.BlockSpec((bn, bn), lambda b, i, j, k: (i, k)),       # K1
+            pl.BlockSpec((1, bn, mpad), lambda b, i, j, k: (b, k, 0)),  # U row strip
+            pl.BlockSpec((bn, mpad), lambda b, i, j, k: (k, 0)),     # mask row strip
+            pl.BlockSpec((mpad, bm), lambda b, i, j, k: (0, j)),     # K2 col strip
+            pl.BlockSpec(memory_space=pltpu.SMEM),                   # noise
+        ],
+        out_specs=pl.BlockSpec((1, bn, bm), lambda b, i, j, k: (b, i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, npad, mpad), dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bn, bm), jnp.float32),   # accumulator
+            pltpu.VMEM((bn, bm), jnp.float32),   # epilogue mask tile
+            pltpu.VMEM((bn, bm), jnp.float32),   # epilogue U tile
+        ],
+        interpret=interpret,
+    )(K1p, up, maskp, K2p, noise_arr)
+
+    return out[:, :n, :m].reshape(*batch_shape, n, m)
+
+
+def lk_mvm_pallas(K1, K2, mask, u, noise=0.0, *, block_n: int = 128,
+                  block_m: int = 128, interpret: bool | None = None,
+                  fused: bool = True,
+                  precision: str = "f32") -> jnp.ndarray:
+    """Masked Kronecker MVM (back-compatible entry point).
+
+    Dispatches to the single-pass :func:`lk_mvm_fused` kernel by default;
+    ``fused=False`` runs the committed two-stage baseline.
+    """
+    if fused:
+        return lk_mvm_fused(K1, K2, mask, u, noise, block_n=block_n,
+                            block_m=block_m, precision=precision,
+                            interpret=interpret)
+    return lk_mvm_two_stage(K1, K2, mask, u, noise, block_n=block_n,
+                            block_m=block_m, interpret=interpret)

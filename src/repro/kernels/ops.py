@@ -2,12 +2,15 @@
 
 On TPU the Pallas path is used; elsewhere (this container is CPU-only) the
 default is the jnp oracle, with ``force_pallas=True`` running the kernels in
-interpret mode for validation.
+interpret mode for validation. The MVM routes through the single-pass fused
+kernel by default (``fused=False`` selects the two-stage baseline); block
+sizes come from the :mod:`repro.kernels.autotune` cache when not given.
 """
 from __future__ import annotations
 
 import jax
 
+from .autotune import autotune_blocks
 from .gram import rbf_gram_pallas
 from .lk_mvm import lk_mvm_pallas
 from .ref import lk_mvm_ref, rbf_gram_ref
@@ -20,10 +23,23 @@ def _use_pallas(force_pallas: bool) -> bool:
 
 
 def lk_mvm_op(K1, K2, mask, u, noise=0.0, *, force_pallas: bool = False,
-              block_n: int = 128, block_m: int = 128):
+              block_n: int | None = None, block_m: int | None = None,
+              fused: bool = True, precision: str = "f32"):
     if _use_pallas(force_pallas):
+        if block_n is None or block_m is None:
+            n, m = mask.shape
+            B = 1
+            for s in u.shape[:-2]:
+                B *= s
+            # timed=False: safe at jit trace time (cache lookup/heuristic
+            # only); benchmarks pre-fill the cache with timed results.
+            bn, bm = autotune_blocks(n, m, B, precision=precision,
+                                     timed=False)
+            block_n = block_n if block_n is not None else bn
+            block_m = block_m if block_m is not None else bm
         return lk_mvm_pallas(K1, K2, mask, u, noise,
-                             block_n=block_n, block_m=block_m)
+                             block_n=block_n, block_m=block_m,
+                             fused=fused, precision=precision)
     return lk_mvm_ref(K1, K2, mask, u, noise)
 
 

@@ -1,0 +1,290 @@
+"""Multi-RHS block solver: warm starts, breakdown flags, per-column
+freezing, CG-Lanczos tridiagonals, and the consolidated stacked solve."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LKGPConfig, cg_solve, cg_solve_tridiag, get_engine,
+                        gram_matrices, init_params, lk_operator, pcg_solve,
+                        posterior, fit, rademacher_probes, slq_logdet,
+                        slq_logdet_from_tridiag, tridiag_from_cg)
+from repro.core.engines import IterativeEngine
+from repro.core.mvm import kron_dense
+from repro.data import sample_task
+
+
+def _lk_problem(n=12, m=10, d=3, seed=0, noise=0.05):
+    key = jax.random.PRNGKey(seed)
+    kx, ky, kl = jax.random.split(key, 3)
+    X = jax.random.uniform(kx, (n, d), jnp.float64)
+    t = jnp.linspace(0.05, 1.0, m).astype(jnp.float64)
+    K1, K2 = gram_matrices(init_params(d, jnp.float64), X, t)
+    lens = jax.random.randint(kl, (n,), m // 2, m + 1)
+    mask = (jnp.arange(m)[None, :] < lens[:, None]).astype(jnp.float64)
+    Y = jax.random.normal(ky, (n, m), jnp.float64) * mask
+    return K1, K2, mask, Y, jnp.float64(noise)
+
+
+# --------------------------------------------------------------------------
+# warm starts (pcg_solve previously had no x0 at all)
+# --------------------------------------------------------------------------
+def test_pcg_warm_start_reduces_iterations():
+    """Restarting a preconditioned solve from the previous solution must
+    cost (strictly) fewer iterations than restarting from zero — the
+    scheduler warm-refit pattern."""
+    N = 60
+    rng = np.random.default_rng(0)
+    Q, _ = np.linalg.qr(rng.standard_normal((N, N)))
+    lam = np.logspace(0.0, -5.0, N)
+    M = jnp.asarray(Q @ np.diag(lam) @ Q.T)
+    A = lambda u: (M @ u[..., None])[..., 0]
+    M_inv = lambda r: r / jnp.diag(M)
+    b = jnp.asarray(rng.standard_normal(N))
+
+    cold = pcg_solve(A, b, M_inv, tol=1e-8, max_iters=2000)
+    assert int(cold.iters) > 0
+    warm = pcg_solve(A, b, M_inv, tol=1e-8, max_iters=2000, x0=cold.x)
+    assert int(warm.iters) < int(cold.iters)
+    assert int(warm.iters) <= 1
+    np.testing.assert_allclose(np.asarray(warm.x), np.asarray(cold.x),
+                               atol=1e-6)
+
+    # a *nearby* start (perturbed solution) also converges faster than cold
+    near = pcg_solve(A, b, M_inv, tol=1e-8, max_iters=2000,
+                     x0=cold.x * (1 + 1e-4))
+    assert int(near.iters) < int(cold.iters)
+
+
+def test_engine_solve_threads_x0_through_pcg():
+    """IterativeEngine.solve(x0=...) must reach the preconditioned solver:
+    warm-started engine solves repeat in O(1) iterations."""
+    K1, K2, mask, Y, noise = _lk_problem()
+    cfg = LKGPConfig(cg_tol=1e-8, cg_max_iters=2000, precond_rank=8)
+    eng = get_engine("iterative")
+    A = eng.operator_from_grams(K1, K2, mask, noise)
+    x = eng.solve(A, Y, cfg)
+    cold = A.last_result
+    warm_x = eng.solve(A, Y, cfg, x0=x)
+    warm = A.last_result
+    assert int(cold.iters) > 0
+    assert int(warm.iters) < int(cold.iters)
+    np.testing.assert_allclose(np.asarray(warm_x), np.asarray(x), atol=1e-6)
+
+
+def test_cg_warm_start_reduces_iterations():
+    K1, K2, mask, Y, noise = _lk_problem(seed=3)
+    A = lk_operator(K1, K2, mask, noise)
+    cold = cg_solve(A, Y, tol=1e-8, max_iters=2000)
+    warm = cg_solve(A, Y, tol=1e-8, max_iters=2000, x0=cold.x)
+    assert int(warm.iters) < int(cold.iters)
+
+
+# --------------------------------------------------------------------------
+# breakdown flag (satellite: silent alpha=0 freeze on indefinite operators)
+# --------------------------------------------------------------------------
+def test_cg_breakdown_flag_on_indefinite_operator():
+    """On an indefinite operator pAp goes negative: the solver must raise
+    the per-system breakdown flag instead of reporting a silent success."""
+    n, m = 4, 3
+    d = jnp.array([1.0, -1.0] * (n * m // 2))     # indefinite diagonal
+    A = lambda u: (d * u.reshape(*u.shape[:-2], -1)).reshape(u.shape)
+    b = jnp.ones((n, m))
+    res = cg_solve(A, b, tol=1e-10, max_iters=50)
+    assert bool(res.breakdown)
+    assert float(res.rel_residual) > 1e-10        # genuinely not solved
+
+    # sanity: SPD system of the same shape does NOT flag breakdown
+    ok = cg_solve(lambda u: 2.0 * u, b, tol=1e-10, max_iters=50)
+    assert not bool(ok.breakdown)
+    assert float(ok.rel_residual) <= 1e-10
+
+
+def test_cg_breakdown_is_per_system_and_freezes_only_bad_column():
+    """In a batch [SPD-solvable | indefinite], only the bad column flags
+    breakdown and the healthy column still converges."""
+    n, m = 4, 3
+    d_good = jnp.full((n * m,), 2.0)
+    d_bad = jnp.array([1.0, -1.0] * (n * m // 2))
+
+    def A(u):
+        flat = u.reshape(2, n * m)
+        out = jnp.stack([d_good * flat[0], d_bad * flat[1]])
+        return out.reshape(u.shape)
+
+    b = jnp.ones((2, n, m))
+    res = cg_solve(A, b, tol=1e-10, max_iters=100)
+    assert list(np.asarray(res.breakdown)) == [False, True]
+    assert float(res.rel_residual[0]) <= 1e-10
+    assert float(res.rel_residual[1]) > 1e-10
+
+
+def test_pcg_breakdown_flag_on_indefinite_operator():
+    N = 12
+    d = jnp.array([1.0, -1.0] * (N // 2))
+    A = lambda u: d * u
+    res = pcg_solve(A, jnp.ones(N), lambda r: r, tol=1e-10, max_iters=50)
+    assert bool(res.breakdown)
+
+
+def test_breakdown_propagates_into_engine_and_posterior_diagnostics():
+    """Engine solves surface the block solver's diagnostics; a healthy LKGP
+    posterior records breakdown=False per RHS after its stacked solve."""
+    K1, K2, mask, Y, noise = _lk_problem()
+    eng = get_engine("iterative")
+    cfg = LKGPConfig(cg_tol=1e-6, cg_max_iters=2000)
+    A = eng.operator_from_grams(K1, K2, mask, noise)
+    res = eng.solve_result(A, Y, cfg)
+    assert res.breakdown is not None and not bool(res.breakdown)
+    assert A.last_result is res
+
+    task = sample_task(seed=5, n=6, m=6, d=4)
+    state = fit(task.X, task.t, task.Y, task.mask,
+                LKGPConfig(lbfgs_iters=0, cg_tol=1e-8, cg_max_iters=2000))
+    post = posterior(state, engine=get_engine("iterative"))
+    _ = post.final()
+    info = post.solve_info
+    assert info is not None
+    assert not bool(np.any(np.asarray(info.breakdown)))
+    assert int(info.iters) > 0
+
+
+# --------------------------------------------------------------------------
+# per-column freezing
+# --------------------------------------------------------------------------
+def test_block_cg_freezes_converged_columns():
+    """Columns converging early stop consuming MVM work: matvecs counts
+    only active columns per sweep, col_iters is per-column, and frozen
+    columns' solutions match their standalone solves."""
+    K1, K2, mask, Y, noise = _lk_problem(n=16, m=12, seed=7)
+    A = lk_operator(K1, K2, mask, noise)
+    hard = Y + 0.5 * jnp.roll(Y, 1, axis=0) * mask
+    rhs = jnp.stack([Y, hard])
+    # column 0 warm-started at its solution: converged from sweep 0, so it
+    # must contribute NO matvec work while column 1 runs the full solve
+    x_star = cg_solve(A, Y, tol=1e-11, max_iters=2000).x
+    res = cg_solve(A, rhs, tol=1e-9, max_iters=2000,
+                   x0=jnp.stack([x_star, jnp.zeros_like(Y)]))
+    iters = int(res.iters)
+    assert iters > 0
+    assert int(res.matvecs) == iters, (int(res.matvecs), iters)
+    assert int(res.col_iters[0]) == 0
+    assert int(res.col_iters[1]) == iters
+
+    # freezing keeps each column's trajectory independent of its co-solved
+    # neighbours (up to batched-vs-single einsum rounding)
+    solo = cg_solve(A, hard, tol=1e-9, max_iters=2000)
+    np.testing.assert_allclose(np.asarray(res.x[1]), np.asarray(solo.x),
+                               atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# CG-Lanczos tridiagonals and the fused SLQ log-det
+# --------------------------------------------------------------------------
+def test_cg_tridiag_logdet_matches_exact_and_lanczos():
+    """The log-det recovered from the stacked solve's CG tridiagonals must
+    agree with the dedicated reorthogonalised-Lanczos SLQ and sit near the
+    exact log-det."""
+    K1, K2, mask, Y, noise = _lk_problem(n=10, m=8, seed=2)
+    A = lk_operator(K1, K2, mask, noise)
+    N_obs = jnp.sum(mask)
+    probes = rademacher_probes(jax.random.PRNGKey(0), 64, mask, jnp.float64)
+
+    res, tri = cg_solve_tridiag(A, probes, max_rank=25, tol=1e-10,
+                                max_iters=2000)
+    diag, off = tridiag_from_cg(tri.alphas, tri.betas, tri.steps)
+    ld_cg = float(slq_logdet_from_tridiag(diag, off, N_obs))
+    ld_lanczos = float(slq_logdet(A, probes, 25, N_obs))
+
+    mv = mask.reshape(-1)
+    Kd = kron_dense(K1, K2) * (mv[:, None] * mv[None, :])
+    Kd = Kd + jnp.diag(noise * mv + (1.0 - mv))
+    _, ld_exact = np.linalg.slogdet(np.asarray(Kd))
+
+    # same probes -> the two SLQ estimators share their Krylov spaces
+    assert abs(ld_cg - ld_lanczos) < 0.05 * abs(ld_exact), \
+        (ld_cg, ld_lanczos, ld_exact)
+    assert abs(ld_cg - ld_exact) < 0.1 * abs(ld_exact), (ld_cg, ld_exact)
+
+
+def test_solve_stacked_consolidates_solves_and_logdet():
+    """ONE solve_stacked call returns the mean solve, the probe solves AND
+    the log-det; solutions match per-RHS standalone solves."""
+    K1, K2, mask, Y, noise = _lk_problem(n=10, m=8, seed=4)
+    eng = IterativeEngine()
+    cfg = LKGPConfig(cg_tol=1e-8, cg_max_iters=2000, slq_iters=25)
+    A = eng.operator_from_grams(K1, K2, mask, noise)
+    probes = rademacher_probes(jax.random.PRNGKey(1), 32, mask, jnp.float64)
+    rhs = jnp.concatenate([Y[None], probes], axis=0)
+
+    st = eng.solve_stacked(A, rhs, cfg, probe_cols=probes.shape[0],
+                           subspace_dim=jnp.sum(mask))
+    assert st.logdet is not None
+    solo = cg_solve(A, Y, tol=1e-8, max_iters=2000)
+    np.testing.assert_allclose(np.asarray(st.x[0]), np.asarray(solo.x),
+                               atol=1e-6)
+
+    ld_sep = float(slq_logdet(A, probes, 25, jnp.sum(mask)))
+    assert abs(float(st.logdet) - ld_sep) < 0.02 * abs(ld_sep)
+    # diagnostics ride along
+    assert int(st.result.iters) > 0 and st.result.breakdown is not None
+
+    # warm starts change the Krylov starting vectors away from the probes,
+    # so the fused log-det must be withheld (caller falls back to SLQ)
+    warm = eng.solve_stacked(A, rhs, cfg, probe_cols=probes.shape[0],
+                             subspace_dim=jnp.sum(mask), x0=st.x)
+    assert warm.logdet is None
+    assert int(warm.result.iters) <= 1
+
+
+def test_posterior_final_uses_one_stacked_solve(monkeypatch):
+    """A fresh posterior's final() (exact mean + Matheron variance) must
+    trigger exactly ONE engine solve — the consolidated stacked solve."""
+    task = sample_task(seed=9, n=6, m=6, d=4)
+    state = fit(task.X, task.t, task.Y, task.mask,
+                LKGPConfig(lbfgs_iters=0, cg_tol=1e-8, cg_max_iters=2000))
+    eng = get_engine("iterative")
+    post = posterior(state, engine=eng)
+
+    solves = {"n": 0}
+    real_solve = type(eng).solve
+
+    def counting_solve(self, A, b, config, x0=None):
+        solves["n"] += 1
+        return real_solve(self, A, b, config, x0=x0)
+
+    monkeypatch.setattr(type(eng), "solve", counting_solve)
+    mean, var = post.final()
+    assert solves["n"] == 1, solves
+    assert np.all(np.isfinite(np.asarray(mean)))
+    assert np.all(np.asarray(var) >= 0)
+    # mean afterwards is free (alpha cached by the stacked solve)
+    _ = post.mean
+    assert solves["n"] == 1
+
+
+def test_mll_value_with_fused_slq_matches_separate_slq():
+    """slq_via_cg=True (one stacked solve) and False (separate Lanczos)
+    must agree on the MLL value to estimator tolerance, and exactly on the
+    quadratic term (identical alpha)."""
+    from repro.core import make_mll
+
+    task = sample_task(seed=3, n=6, m=6, d=4)
+    X = jnp.asarray(task.X)
+    t = jnp.asarray(task.t, X.dtype)
+    Y = jnp.asarray(task.Y, X.dtype)
+    mask = jnp.asarray(task.mask, X.dtype)
+    params = init_params(X.shape[1], X.dtype)
+    probes = rademacher_probes(jax.random.PRNGKey(0), 128, mask, X.dtype)
+
+    base = dict(cg_tol=1e-8, cg_max_iters=2000, slq_probes=128, slq_iters=25)
+    v_fused = float(make_mll(LKGPConfig(slq_via_cg=True, **base),
+                             get_engine("iterative"))(
+        params, X, t, Y, mask, probes))
+    v_sep = float(make_mll(LKGPConfig(slq_via_cg=False, **base),
+                           get_engine("iterative"))(
+        params, X, t, Y, mask, probes))
+    assert abs(v_fused - v_sep) / abs(v_sep) < 0.02, (v_fused, v_sep)

@@ -9,8 +9,10 @@ try:
 except ImportError:  # container has no hypothesis wheel; see tests/_hypcompat.py
     from _hypcompat import given, settings, st
 
-from repro.kernels import (lk_mvm_pallas, lk_mvm_ref, rbf_gram_pallas,
-                           rbf_gram_ref)
+from repro.kernels import (CANDIDATE_BLOCKS, autotune_blocks, lk_mvm_fused,
+                           lk_mvm_pallas, lk_mvm_ref, lk_mvm_two_stage,
+                           rbf_gram_pallas, rbf_gram_ref)
+from repro.kernels import autotune as kernel_autotune
 
 SHAPES_MVM = [
     # (B, n, m)
@@ -97,6 +99,111 @@ def test_property_lk_mvm_random_shapes(n, m, B, seed):
     ref = lk_mvm_ref(K1, K2, mask, u, 0.05)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-5,
                                atol=3e-5)
+
+
+# --------------------------------------------------------------------------
+# fused single-pass kernel: parity with the oracle and the two-stage kernel
+# --------------------------------------------------------------------------
+FUSED_AWKWARD_SHAPES = [
+    # (B, n, m): non-multiples of the block, n < 8, B > 1
+    (1, 5, 3),        # tiny, below the minimum tile
+    (1, 7, 19),       # n < 8, m prime
+    (2, 130, 70),     # non-divisible by any candidate block
+    (3, 33, 48),      # n just over a block multiple
+    (4, 64, 128),     # m spans multiple column blocks
+    (2, 96, 130),     # m just over a block, B > 1
+]
+
+
+@pytest.mark.parametrize("shape", FUSED_AWKWARD_SHAPES)
+@pytest.mark.parametrize("block", [(16, 16), (64, 32), (128, 128)])
+def test_lk_mvm_fused_matches_ref_awkward_shapes(shape, block):
+    """Interpret-mode parity on shapes that stress padding and epilogue
+    capture: n/m not multiples of the block, n < 8, B > 1."""
+    B, n, m = shape
+    K1, K2, mask, u = _mvm_problem(B, n, m, jnp.float32)
+    noise = 0.23
+    out = lk_mvm_fused(K1, K2, mask, u, noise, block_n=block[0],
+                       block_m=block[1], interpret=True)
+    ref = lk_mvm_ref(K1, K2, mask, u, noise)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    assert out.dtype == ref.dtype
+
+
+@pytest.mark.parametrize("shape", [(1, 16, 12), (2, 40, 24)])
+def test_lk_mvm_fused_bf16_mode(shape):
+    """bf16-inputs / f32-accumulate mode: bf16-level agreement with the
+    oracle, exact zeros outside the mask, output dtype preserved."""
+    B, n, m = shape
+    K1, K2, mask, u = _mvm_problem(B, n, m, jnp.float32)
+    out = lk_mvm_fused(K1, K2, mask, u, 0.31, block_n=32, block_m=32,
+                       precision="bf16", interpret=True)
+    ref = np.asarray(lk_mvm_ref(K1, K2, mask, u, 0.31))
+    assert out.dtype == jnp.float32
+    scale = np.max(np.abs(ref))
+    np.testing.assert_allclose(np.asarray(out), ref, atol=0.05 * scale)
+    # the mask epilogue is exact in bf16 (0/1 values)
+    np.testing.assert_array_equal(np.asarray(out) * (1 - np.asarray(mask)), 0)
+
+
+def test_lk_mvm_fused_matches_two_stage():
+    """The committed two-stage kernel and the fused kernel are the same
+    operator; lk_mvm_pallas dispatches between them."""
+    K1, K2, mask, u = _mvm_problem(3, 48, 20, jnp.float32)
+    a = lk_mvm_fused(K1, K2, mask, u, 0.5, block_n=32, block_m=32,
+                     interpret=True)
+    b = lk_mvm_two_stage(K1, K2, mask, u, 0.5, block_n=32, block_m=32,
+                         interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+    via_entry = lk_mvm_pallas(K1, K2, mask, u, 0.5, block_n=32, block_m=32,
+                              interpret=True, fused=False)
+    np.testing.assert_array_equal(np.asarray(via_entry), np.asarray(b))
+
+
+def test_lk_mvm_fused_leading_batch_dims():
+    K1, K2, mask, u = _mvm_problem(6, 16, 12, jnp.float32)
+    u4 = u.reshape(2, 3, 16, 12)
+    out = lk_mvm_fused(K1, K2, mask, u4, 0.1, block_n=16, block_m=16,
+                       interpret=True)
+    ref = lk_mvm_ref(K1, K2, mask, u4, 0.1)
+    assert out.shape == (2, 3, 16, 12)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_autotune_blocks_heuristic_and_cache():
+    """Off-TPU the autotuner picks the single-sweep heuristic (smallest
+    candidate covering each axis), caches per shape bucket, and accepts
+    pre-seeded (e.g. timed) entries."""
+    kernel_autotune.clear_cache()
+    try:
+        bn, bm = autotune_blocks(100, 40, 4, timed=False)
+        assert bn == 128 and bm == 64          # smallest covering candidates
+        assert autotune_blocks(120, 33, 3, timed=False) == (bn, bm)  # bucket hit
+        assert len(kernel_autotune.cache_contents()) == 1
+        big = autotune_blocks(1000, 500, 1, timed=False)
+        assert big == (CANDIDATE_BLOCKS[-1], CANDIDATE_BLOCKS[-1])
+    finally:
+        kernel_autotune.clear_cache()
+
+
+def test_autotune_timed_sweep_validates_and_picks_candidate():
+    """A timed sweep (forced on CPU/interpret) returns a candidate pair and
+    the fused kernel at that pair matches the oracle."""
+    kernel_autotune.clear_cache()
+    try:
+        bn, bm = autotune_blocks(24, 16, 2, timed=True, interpret=True)
+        assert bn in CANDIDATE_BLOCKS and bm in CANDIDATE_BLOCKS
+        K1, K2, mask, u = _mvm_problem(2, 24, 16, jnp.float32)
+        out = lk_mvm_fused(K1, K2, mask, u, 0.1, block_n=bn, block_m=bm,
+                           interpret=True)
+        ref = lk_mvm_ref(K1, K2, mask, u, 0.1)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+    finally:
+        kernel_autotune.clear_cache()
 
 
 def test_lk_mvm_pallas_inside_cg():
