@@ -21,7 +21,17 @@ Four sections, all written to ``BENCH_automl.json``:
   them: SH-lkgp beats SH-rank at equal budget, and ``precond_rank > 0``
   reduces CG iterations on at least one size.
 
+With ``--dataset lcbench:<path>`` the scheduler races replay the tasks of
+an LCBench/ifBO-format artifact instead of sampling the synthetic prior:
+each pool steps through the artifact's recorded curves
+(:func:`repro.data.curves.replay_step_fns`) on the artifact's (possibly
+non-uniform) budget grid, which the LKGP consumes as its progression axis.
+Rows and payload meta carry the dataset id so the regression gate never
+compares synthetic and real rows; the precond/batched solver sections stay
+on the synthetic prior (they measure the solver, not the data).
+
     PYTHONPATH=src python benchmarks/bench_automl.py [--quick]
+        [--dataset lcbench:tests/fixtures/lcbench_mini.npz]
 """
 from __future__ import annotations
 
@@ -44,36 +54,68 @@ from repro.core import (LKGPConfig, cg_solve, fit, fit_batch, get_engine,
                         gram_matrices, init_params, pcg_solve,
                         pivoted_cholesky_grid, posterior, posterior_batch,
                         woodbury_preconditioner)
-from repro.data import noisy_step_fns, sample_suite, sample_task, stack_suite
+from repro.data import (get_source, noisy_step_fns, replay_step_fns,
+                        sample_suite, sample_task, stack_suite)
 
 
 # --------------------------------------------------------------------------
 # scheduler section
 # --------------------------------------------------------------------------
-def _regret_trajectory(rungs, true_final, best):
-    """Anytime regret: incumbent (best-scored active) after each rung."""
+def _regret_trajectory(rungs, true_final, best, sign=1.0):
+    """Anytime regret: incumbent (best-scored active) after each rung.
+
+    ``sign`` is +1 for maximized metrics, -1 for minimized ones (scores
+    are always score-space, larger = better; regret stays >= 0 either
+    way).
+    """
     out = []
     for rung in rungs:
         act = rung["active"]
         inc = act[int(np.argmax(rung["scores"]))]
         out.append([int(rung["epochs_spent"]),
-                    round(float(best - true_final[inc]), 5)])
+                    round(float(sign * (best - true_final[inc])), 5)])
     return out
 
 
 def run_suite(suite: dict, seeds, gp: LKGPConfig, out=print):
+    """Race every scheduler on one suite.
+
+    Synthetic suites sample a fresh task per seed; dataset suites carry a
+    loaded ``task`` (``replay=True``) whose recorded curves are replayed —
+    the seed then varies the history selection and scheduler tie-breaks,
+    not the curves. Either way the task's progression grid ``t`` (uniform
+    epochs or real budget fidelities) is handed to the model.
+    """
     rows = []
-    n, m = suite["n"], suite["m"]
+    replay = bool(suite.get("replay"))
     for seed in seeds:
-        task = sample_task(seed=suite["task_seed"] + seed, n=n, m=m,
-                           d=suite["d"], noise=0.005,
-                           diverge_prob=suite["diverge_prob"],
-                           spike_prob=0.0, crossing=True)
+        if replay:
+            task = suite["task"]
+        else:
+            task = sample_task(seed=suite["task_seed"] + seed,
+                               n=suite["n"], m=suite["m"],
+                               d=suite["d"], noise=0.005,
+                               diverge_prob=suite["diverge_prob"],
+                               spike_prob=0.0, crossing=True)
+        n, m = task.Y_full.shape
+
+        def step_fns():
+            if replay:
+                return replay_step_fns(task, 7000 + seed,
+                                       suite["obs_noise"],
+                                       suite["spike_prob"],
+                                       censored=suite.get("censored"))
+            return noisy_step_fns(task, 7000 + seed, suite["obs_noise"],
+                                  suite["spike_prob"])
+
         rng = np.random.default_rng(seed)
         hist = rng.choice(n, suite["n_hist"], replace=False)
         fresh = np.setdiff1d(np.arange(n), hist).tolist()
+        maximize = bool(suite.get("maximize", True))
+        sign = 1.0 if maximize else -1.0
         true_final = task.Y_full[:, -1]
-        best = float(true_final[fresh].max())
+        best = float(true_final[fresh].max() if maximize
+                     else true_final[fresh].min())
 
         def race(name, make_sched, select_key="selected"):
             sched, run_kwargs = make_sched()
@@ -87,7 +129,8 @@ def run_suite(suite: dict, seeds, gp: LKGPConfig, out=print):
                 surv = [i for i in summary["survivors"] if i in fresh]
                 pred = summary.get("predicted_final")
                 if surv and pred is not None:
-                    sel = surv[int(np.argmax([pred[i] for i in surv]))]
+                    pick = [sign * pred[i] for i in surv]   # raw -> score
+                    sel = surv[int(np.argmax(pick))]
                 else:
                     sel = surv[0] if surv else fresh[0]
             else:
@@ -97,27 +140,28 @@ def run_suite(suite: dict, seeds, gp: LKGPConfig, out=print):
                 "n": n, "m": m, "n_hist": suite["n_hist"],
                 "obs_noise": suite["obs_noise"],
                 "diverge_prob": suite["diverge_prob"],
+                "maximize": maximize,
                 "epochs_spent": int(summary["epochs_spent"]),
-                "regret": round(float(best - true_final[sel]), 5),
+                "regret": round(float(sign * (best - true_final[sel])), 5),
                 "wall_s": round(wall, 3),
             }
             if "rungs" in summary:
                 row["regret_vs_budget"] = _regret_trajectory(
-                    summary["rungs"], true_final, best)
+                    summary["rungs"], true_final, best, sign)
             rows.append(row)
             out(f"{suite['name']},{name},{seed},{row['epochs_spent']},"
                 f"{row['regret']},{row['wall_s']}")
 
         sh_cfg = dict(max_epochs=m, min_epochs=suite["min_epochs"],
-                      eta=3, gp=gp, ucb_beta=0.0, refit_lbfgs_iters=8)
+                      eta=3, gp=gp, ucb_beta=0.0, refit_lbfgs_iters=8,
+                      maximize=maximize)
 
         def sh(promotion):
             def make():
                 sched = SuccessiveHalvingScheduler(
-                    task.X,
-                    noisy_step_fns(task, 7000 + seed, suite["obs_noise"],
-                                   suite["spike_prob"]),
-                    SHConfig(promotion=promotion, **sh_cfg), seed=seed)
+                    task.X, step_fns(),
+                    SHConfig(promotion=promotion, **sh_cfg), seed=seed,
+                    t=task.t)
                 return sched, {"subset": fresh}
             return make
 
@@ -126,24 +170,21 @@ def run_suite(suite: dict, seeds, gp: LKGPConfig, out=print):
 
         def hb():
             sched = HyperbandScheduler(
-                task.X,
-                noisy_step_fns(task, 7000 + seed, suite["obs_noise"],
-                               suite["spike_prob"]),
+                task.X, step_fns(),
                 SHConfig(promotion="lkgp", **sh_cfg), seed=seed,
-                candidates=fresh)
+                candidates=fresh, t=task.t)
             return sched, {}
 
         race("hyperband-lkgp", hb)
 
         def ft():
             sched = FreezeThawScheduler(
-                task.X,
-                noisy_step_fns(task, 7000 + seed, suite["obs_noise"],
-                               suite["spike_prob"]),
+                task.X, step_fns(),
                 AutotuneConfig(max_epochs=m, refit_every=max(2, m // 4),
                                min_epochs_before_stop=suite["min_epochs"],
-                               ucb_beta=1.0, gp=gp, refit_lbfgs_iters=8),
-                seed=seed)
+                               ucb_beta=1.0, gp=gp, refit_lbfgs_iters=8,
+                               maximize=maximize),
+                seed=seed, t=task.t)
             return sched, {}
 
         race("freeze-thaw", ft, select_key="survivors")
@@ -249,6 +290,39 @@ def bench_batched(num_tasks, n, m, d=5, out=print):
 # --------------------------------------------------------------------------
 # main
 # --------------------------------------------------------------------------
+def dataset_suites(src, quick: bool, out=print):
+    """One replay suite per artifact task (first task only when quick).
+
+    Censored tasks (no post-cutoff ground truth: the loader fell back to
+    ``Y_full = masked Y``) are skipped — regret against zero-padded finals
+    would be meaningless. The artifact's metric convention rides along so
+    minimized metrics race with inverted promotion and regret math.
+    """
+    names = getattr(src, "names", None)
+    has_full = getattr(src, "has_full", None)
+    maximize = bool(getattr(src, "maximize", True))
+    suites = []
+    for i, task in enumerate(src.tasks()):
+        name = names[i] if names and i < len(names) else f"task{i}"
+        if has_full is not None and i < len(has_full) and not has_full[i]:
+            out(f"# skipping censored task {src.dataset_id}/{name}: no "
+                "ground-truth finals to measure regret against")
+            continue
+        n, m = task.Y_full.shape
+        suites.append(dict(
+            name=f"{src.dataset_id}/{name}", task=task, replay=True,
+            censored=False, maximize=maximize,
+            n=n, m=m, n_hist=max(2, n // 8),
+            min_epochs=1 if quick else min(2, m),
+            obs_noise=0.0, spike_prob=0.0, diverge_prob=0.0))
+    if not suites:
+        raise SystemExit(f"--dataset {src.dataset_id}: every task is "
+                         "censored; no ground truth to race against")
+    # Truncate AFTER the censored filter so a censored-first artifact
+    # still yields the first raceable task in quick mode.
+    return suites[:1] if quick else suites
+
+
 def suites_grid(quick: bool):
     base = dict(d=5, obs_noise=0.02, spike_prob=0.03, diverge_prob=0.0,
                 min_epochs=3, task_seed=500)
@@ -268,18 +342,28 @@ def suites_grid(quick: bool):
 
 
 def main(quick: bool = False, seeds=None, out_path: str = "BENCH_automl.json",
-         out=print):
+         out=print, dataset: str | None = None):
     gp = LKGPConfig(lbfgs_iters=20, posterior_samples=64, slq_probes=8,
                     slq_iters=15)
     if seeds is None:
         seeds = range(2) if quick else range(4)
     seeds = list(seeds)
 
+    if dataset:
+        src = get_source(dataset)
+        dataset_id = src.dataset_id
+        suites = dataset_suites(src, quick, out=out)
+        out(f"# bench_automl on {dataset_id}: {len(suites)} replayed tasks")
+    else:
+        dataset_id = "synthetic"
+        suites = suites_grid(quick)
     out("# bench_automl: scheduler regret/budget, PCG, batched harness")
     out("suite,scheduler,seed,epochs_spent,regret,wall_s")
     sched_rows = []
-    for suite in suites_grid(quick):
+    for suite in suites:
         sched_rows += run_suite(suite, seeds, gp, out=out)
+    for r in sched_rows:
+        r["dataset"] = dataset_id
 
     precond_rows = bench_precond(
         sizes=((24, 16),) if quick else ((32, 24), (64, 32)),
@@ -322,6 +406,7 @@ def main(quick: bool = False, seeds=None, out_path: str = "BENCH_automl.json",
             "jax_version": jax.__version__,
             "platform": platform.platform(),
             "quick": quick, "seeds": seeds,
+            "dataset": dataset_id,
             "gp": {"lbfgs_iters": gp.lbfgs_iters,
                    "posterior_samples": gp.posterior_samples},
         },
@@ -342,5 +427,9 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true",
                     help="smoke sizes for the CI gate")
     ap.add_argument("--out", default="BENCH_automl.json")
+    ap.add_argument("--dataset", default=None,
+                    help="curve source spec, e.g. "
+                         "lcbench:tests/fixtures/lcbench_mini.npz "
+                         "(default: the synthetic prior grid)")
     args = ap.parse_args()
-    main(quick=args.quick, out_path=args.out)
+    main(quick=args.quick, out_path=args.out, dataset=args.dataset)

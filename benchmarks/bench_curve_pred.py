@@ -17,7 +17,15 @@ task" (PAPER.md §5) — on the offline synthetic LCBench-like prior:
    accuracy units for MAE, nats for NLL — because the transformer is
    amortized over the exact task prior and sets a strong reference).
 
+With ``--dataset lcbench:<path>`` the held-out suites come from an
+LCBench/ifBO-format artifact instead of the synthetic prior (the
+transformer still pre-trains on the prior, at the artifact's shapes and
+budget grid — the realistic transfer setting); every row and the payload
+meta carry the dataset id so the regression gate never compares synthetic
+and real rows.
+
     PYTHONPATH=src python benchmarks/bench_curve_pred.py [--quick]
+        [--dataset lcbench:tests/fixtures/lcbench_mini.npz]
 """
 from __future__ import annotations
 
@@ -35,7 +43,7 @@ import numpy as np
 from repro.baselines import (CurveTransformerConfig, PretrainConfig,
                              head_to_head, pretrain)
 from repro.core import LKGPConfig
-from repro.data import sample_suite
+from repro.data import get_source, sample_suite
 
 # Paper-tolerance margins for "the GP matches the Transformer" (absolute:
 # accuracy units for MAE, nats per cell for NLL, Spearman units for rank).
@@ -74,16 +82,31 @@ def _summarise(rows):
 
 
 def main(quick: bool = False, steps: int | None = None, seed: int = 0,
-         out_path: str = "BENCH_curve_pred.json", out=print):
+         out_path: str = "BENCH_curve_pred.json", out=print,
+         dataset: str | None = None):
     t_all = time.time()
-    m = 9 if quick else 12
-    model_cfg = (CurveTransformerConfig(d_model=32, num_layers=2,
+    if dataset:
+        src = get_source(dataset)
+        dataset_id = src.dataset_id
+        ds_tasks = src.tasks(2 if quick else None)
+        d = ds_tasks[0].X.shape[1]
+        grid = max((np.asarray(tk.t, np.float64) for tk in ds_tasks),
+                   key=len)
+        m = grid.shape[0]
+        pre_t = tuple(float(v) for v in grid)
+        has_full = getattr(src, "has_full", [True] * len(ds_tasks))
+        out(f"# dataset {dataset_id}: {len(ds_tasks)} tasks, d={d}, "
+            f"grid m={m} t=[{grid[0]:g}..{grid[-1]:g}]")
+    else:
+        dataset_id = "synthetic"
+        d, m, pre_t = 7, 9 if quick else 12, None
+    model_cfg = (CurveTransformerConfig(d_in=d, d_model=32, num_layers=2,
                                         num_heads=2, d_ff=64)
-                 if quick else CurveTransformerConfig())
+                 if quick else CurveTransformerConfig(d_in=d))
     pre_cfg = PretrainConfig(
         steps=steps or (250 if quick else 2000),
         tasks_per_step=4 if quick else 6,
-        n=10 if quick else 16, m=m, seed=seed,
+        n=10 if quick else 16, m=m, d=d, t=pre_t, seed=seed,
         log_every=100 if quick else 200)
     out(f"# pre-training curve transformer ({pre_cfg.steps} steps, "
         f"m={pre_cfg.m})")
@@ -94,17 +117,31 @@ def main(quick: bool = False, steps: int | None = None, seed: int = 0,
     gp_cfg = LKGPConfig(lbfgs_iters=40, seed=seed)
     cutoffs = (0.2, 0.4, 0.7)
     rows = []
-    for suite in _suites(quick):
-        tasks = sample_suite(suite["seed"], suite["num_tasks"],
-                             n=suite["n"], m=m, d=suite["d"],
-                             noise=suite["noise"],
-                             spike_prob=suite["spike_prob"],
-                             diverge_prob=suite["diverge_prob"],
-                             crossing=suite["crossing"])
-        out(f"# suite {suite['name']}: {suite['num_tasks']} tasks, "
-            f"n={suite['n']} m={m}, cutoffs {cutoffs}")
-        rows += head_to_head(params, model_cfg, tasks, cutoffs=cutoffs,
-                             gp_cfg=gp_cfg, seed=seed, suite=suite["name"])
+    if dataset:
+        # Censored tasks (no post-cutoff ground truth) restrict scoring to
+        # their artifact mask; fully-recorded tasks score everywhere.
+        valid_masks = (None if all(has_full)
+                       else [np.ones_like(tk.mask) if hf else tk.mask
+                             for tk, hf in zip(ds_tasks, has_full)])
+        out(f"# suite {dataset_id}: {len(ds_tasks)} tasks, cutoffs {cutoffs}")
+        rows += head_to_head(params, model_cfg, ds_tasks, cutoffs=cutoffs,
+                             gp_cfg=gp_cfg, seed=seed, suite=dataset_id,
+                             valid_masks=valid_masks)
+    else:
+        for suite in _suites(quick):
+            tasks = sample_suite(suite["seed"], suite["num_tasks"],
+                                 n=suite["n"], m=m, d=suite["d"],
+                                 noise=suite["noise"],
+                                 spike_prob=suite["spike_prob"],
+                                 diverge_prob=suite["diverge_prob"],
+                                 crossing=suite["crossing"])
+            out(f"# suite {suite['name']}: {suite['num_tasks']} tasks, "
+                f"n={suite['n']} m={m}, cutoffs {cutoffs}")
+            rows += head_to_head(params, model_cfg, tasks, cutoffs=cutoffs,
+                                 gp_cfg=gp_cfg, seed=seed,
+                                 suite=suite["name"])
+    for r in rows:
+        r["dataset"] = dataset_id
 
     summary = _summarise(rows)
     out("model,nll,mae,rank_corr,fit_s,predict_s")
@@ -134,6 +171,7 @@ def main(quick: bool = False, steps: int | None = None, seed: int = 0,
             "platform": platform.platform(),
             "quick": quick,
             "seed": seed,
+            "dataset": dataset_id,
             "cutoffs": list(cutoffs),
             "tolerances": {"mae": MAE_TOL, "nll": NLL_TOL, "rank": RANK_TOL},
             "gp": {"lbfgs_iters": gp_cfg.lbfgs_iters},
@@ -159,6 +197,10 @@ if __name__ == "__main__":
                     help="override pre-training steps")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_curve_pred.json")
+    ap.add_argument("--dataset", default=None,
+                    help="curve source spec, e.g. "
+                         "lcbench:tests/fixtures/lcbench_mini.npz "
+                         "(default: the synthetic prior suites)")
     args = ap.parse_args()
     main(quick=args.quick, steps=args.steps, seed=args.seed,
-         out_path=args.out)
+         out_path=args.out, dataset=args.dataset)

@@ -13,31 +13,39 @@ model loop over a pool of partially observed learning curves:
      variance).
 
 :class:`CurvePredictor` owns that loop so scheduler classes only contain
-promotion/stopping policy. Predictions live in *score space* (metrics are
-multiplied by ±1 so that larger is always better); ``to_raw`` undoes the
-sign for reporting.
+promotion/stopping policy. Predictions live in *score space* — the raw
+metric mapped through an invertible
+:class:`~repro.data.transforms.AffineTransform` (default: a ±1 sign flip
+from ``maximize``) so that larger is always better; ``to_raw`` inverts the
+transform for reporting.
 
 :class:`RunPool` is the matching execution-side helper: it drives the
 user-supplied ``step_fns`` (one "advance one epoch -> metric" callable per
 config), records curves/masks, and enforces a total epoch budget.
+:meth:`RunPool.replay` builds the pool straight from a loaded dataset
+task, stepping through its recorded curves.
 """
 from __future__ import annotations
 
+import math
 from typing import Callable
 
 import jax
 import numpy as np
+from jax.scipy.special import erfinv
 
 from ..core import LKGPConfig, LKGPState, extend, fit, posterior, refit
+from ..data.curves import CurveTask, replay_step_fns
+from ..data.transforms import AffineTransform
 
 __all__ = ["CurvePredictor", "RunPool"]
 
 
 def _norm_ppf(q: float) -> float:
-    """Standard-normal quantile."""
-    from scipy.stats import norm
-
-    return float(norm.ppf(q))
+    """Standard-normal quantile via erfinv (no scipy dependency)."""
+    if not 0.0 < q < 1.0:
+        raise ValueError(f"quantile must be in (0, 1), got {q}")
+    return float(math.sqrt(2.0) * erfinv(2.0 * q - 1.0))
 
 
 class CurvePredictor:
@@ -46,27 +54,53 @@ class CurvePredictor:
     Parameters
     ----------
     X : (n, d) hyper-parameter configurations (the whole pool).
-    max_epochs : grid length m; progressions are epochs ``1..m``.
+    max_epochs : grid length m; progressions default to epochs ``1..m``.
     gp : model/inference config for the cold fit (``precond_rank`` et al.
         flow straight through to the engines).
     maximize : if False the metric is negated internally so score space is
-        always "larger is better".
+        always "larger is better" (ignored when ``metric_tf`` is given).
     refit_lbfgs_iters : L-BFGS budget for warm-started refits
         (None -> ``gp.lbfgs_iters``).
+    t : explicit progression grid (length ``max_epochs``; positive,
+        strictly increasing) — e.g. a real dataset's log-spaced budget
+        fidelities. The GP's progression kernel sees these values; the
+        scheduler's epoch indices keep addressing positions ``0..m-1``.
+    metric_tf : invertible transform raw metric -> score space (an
+        :class:`~repro.data.transforms.AffineTransform`-like object with
+        ``__call__`` / ``inverse``). Default: the ±1 sign flip derived
+        from ``maximize``.
     """
 
-    def __init__(self, X, max_epochs: int, gp: LKGPConfig | None = None,
+    def __init__(self, X, max_epochs: int | None = None,
+                 gp: LKGPConfig | None = None,
                  maximize: bool = True, refit_lbfgs_iters: int | None = None,
-                 seed: int = 0):
+                 seed: int = 0, t=None, metric_tf=None):
         self.X = np.asarray(X, np.float64)
-        self.t = np.arange(1.0, max_epochs + 1.0)
+        if t is not None:
+            self.t = np.asarray(t, np.float64)
+            if self.t.ndim != 1 or np.any(np.diff(self.t) <= 0) \
+                    or self.t[0] <= 0:
+                raise ValueError("t must be a positive strictly-increasing "
+                                 f"1-D grid, got {self.t}")
+            if max_epochs is not None and max_epochs != self.t.shape[0]:
+                raise ValueError(f"max_epochs={max_epochs} disagrees with "
+                                 f"len(t)={self.t.shape[0]}")
+        elif max_epochs is not None:
+            self.t = np.arange(1.0, max_epochs + 1.0)
+        else:
+            raise ValueError("give max_epochs or an explicit t grid")
         self.gp = gp if gp is not None else LKGPConfig(lbfgs_iters=30)
-        self.sign = 1.0 if maximize else -1.0
+        self.metric_tf = (metric_tf if metric_tf is not None
+                          else AffineTransform.sign(maximize))
         self.refit_lbfgs_iters = refit_lbfgs_iters
         self.seed = seed
         self.state: LKGPState | None = None
         self.n_refits = 0
         self._final_cache: tuple | None = None   # (n_refits, mean, std)
+
+    @property
+    def max_epochs(self) -> int:
+        return self.t.shape[0]
 
     def update(self, Y, mask) -> None:
         """Fold the pool's current (n, m) curves in and re-optimise.
@@ -74,7 +108,7 @@ class CurvePredictor:
         ``mask`` must grow monotonically between calls (``extend`` enforces
         it) — schedulers only ever add observations.
         """
-        Y = self.sign * np.asarray(Y, np.float64)
+        Y = np.asarray(self.metric_tf(np.asarray(Y, np.float64)), np.float64)
         mask = np.asarray(mask, np.float64)
         if self.state is None:
             self.state = fit(self.X, self.t, Y, mask, self.gp)
@@ -125,7 +159,7 @@ class CurvePredictor:
 
     def to_raw(self, scores: np.ndarray) -> np.ndarray:
         """Map score-space values back to raw metric units."""
-        return self.sign * np.asarray(scores)
+        return np.asarray(self.metric_tf.inverse(np.asarray(scores)))
 
 
 class RunPool:
@@ -147,6 +181,26 @@ class RunPool:
         self.epochs_done = np.zeros(n, np.int64)
         self.spent = 0
         self.budget = budget
+
+    @classmethod
+    def replay(cls, task: CurveTask, budget: int | None = None,
+               seed: int = 0, obs_noise: float = 0.0,
+               spike_prob: float = 0.0,
+               censored: bool | None = None) -> "RunPool":
+        """Replay mode: a pool stepping through a loaded task's real curves.
+
+        The step callables come from
+        :func:`repro.data.curves.replay_step_fns` — exact replay of the
+        task's recorded ``Y_full`` by default (censored configs hold their
+        last observed value), with an optional observation-noise model on
+        top. ``max_epochs`` is the task's grid length. Pass ``censored``
+        (e.g. ``not artifact.has_full[i]``) to override the zero-tail
+        heuristic with the artifact's authoritative flag.
+        """
+        return cls(replay_step_fns(task, seed=seed, obs_noise=obs_noise,
+                                   spike_prob=spike_prob,
+                                   censored=censored),
+                   max_epochs=np.asarray(task.t).shape[0], budget=budget)
 
     @property
     def n(self) -> int:

@@ -47,7 +47,7 @@ class FreezeThawScheduler:
     """Drives n runs; ``step_fns[i]() -> float`` advances run i one epoch."""
 
     def __init__(self, X: np.ndarray, step_fns: list[Callable[[], float]],
-                 cfg: AutotuneConfig | None = None, seed: int = 0):
+                 cfg: AutotuneConfig | None = None, seed: int = 0, t=None):
         self.X = np.asarray(X, np.float64)
         self.step_fns = step_fns
         self.cfg = cfg or AutotuneConfig()
@@ -56,9 +56,11 @@ class FreezeThawScheduler:
         self.active = np.ones(n, bool)
         self.seed = seed
         self.history: list[dict] = []
+        # ``t`` carries a real dataset's (possibly non-uniform) budget grid
+        # into the model; scheduling still counts epoch indices.
         self.predictor = CurvePredictor(
             self.X, m, gp=self.cfg.gp, maximize=self.cfg.maximize,
-            refit_lbfgs_iters=self.cfg.refit_lbfgs_iters, seed=seed)
+            refit_lbfgs_iters=self.cfg.refit_lbfgs_iters, seed=seed, t=t)
 
     @property
     def state(self) -> LKGPState | None:

@@ -57,17 +57,20 @@ class SuccessiveHalvingScheduler:
 
     def __init__(self, X, step_fns, cfg: SHConfig | None = None, seed: int = 0,
                  pool: RunPool | None = None,
-                 predictor: CurvePredictor | None = None):
+                 predictor: CurvePredictor | None = None, t=None):
         self.X = np.asarray(X, np.float64)
         self.cfg = cfg or SHConfig()
         self.seed = seed
         self.pool = pool if pool is not None else RunPool(
             step_fns, self.cfg.max_epochs)
         if predictor is None and self.cfg.promotion == "lkgp":
+            # ``t`` carries a real dataset's (possibly non-uniform) budget
+            # grid into the model; rung resources stay epoch *indices*.
             predictor = CurvePredictor(
                 self.X, self.cfg.max_epochs, gp=self.cfg.gp,
                 maximize=self.cfg.maximize,
-                refit_lbfgs_iters=self.cfg.refit_lbfgs_iters, seed=seed)
+                refit_lbfgs_iters=self.cfg.refit_lbfgs_iters, seed=seed,
+                t=t)
         self.predictor = predictor
         self.history: list[dict] = []
 
@@ -157,7 +160,8 @@ class HyperbandScheduler:
     """
 
     def __init__(self, X, step_fns, cfg: SHConfig | None = None,
-                 seed: int = 0, candidates: list[int] | None = None):
+                 seed: int = 0, candidates: list[int] | None = None,
+                 t=None):
         self.X = np.asarray(X, np.float64)
         self.cfg = cfg or SHConfig()
         self.seed = seed
@@ -172,7 +176,8 @@ class HyperbandScheduler:
             self.predictor = CurvePredictor(
                 self.X, self.cfg.max_epochs, gp=self.cfg.gp,
                 maximize=self.cfg.maximize,
-                refit_lbfgs_iters=self.cfg.refit_lbfgs_iters, seed=seed)
+                refit_lbfgs_iters=self.cfg.refit_lbfgs_iters, seed=seed,
+                t=t)
         self.brackets: list[dict] = []
 
     def run(self) -> dict:

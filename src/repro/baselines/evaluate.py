@@ -44,25 +44,42 @@ def cutoff_masks(task: CurveTask, cutoffs, seed: int) -> dict:
     return out
 
 
-def score_predictions(mean, var, task: CurveTask, mask) -> dict:
-    """NLL / MAE on unobserved cells + final-value rank correlation."""
+def score_predictions(mean, var, task: CurveTask, mask, valid=None) -> dict:
+    """NLL / MAE on unobserved cells + final-value rank correlation.
+
+    ``valid`` (optional (n, m) 0/1 array) restricts scoring to cells where
+    ``task.Y_full`` is real ground truth — for censored dataset artifacts
+    (no post-cutoff values) pass the artifact's early-stop mask so padding
+    zeros are never scored against. The rank correlation likewise only
+    ranks configs whose *final* cell is valid. With no scorable hidden
+    cell at all, NLL/MAE come back NaN (callers should skip such rows —
+    ``head_to_head`` does).
+    """
     from scipy.stats import spearmanr
 
     truth = task.Y_full
     unobs = np.asarray(mask) == 0
+    if valid is not None:
+        unobs = unobs & (np.asarray(valid) > 0)
     var = np.maximum(np.asarray(var, np.float64), 1e-8)
     resid = np.asarray(mean, np.float64) - truth
     nll_cells = np.asarray(gaussian_nll(np.asarray(mean, np.float64),
                                         np.sqrt(var), truth))
+    final_ok = (np.ones(truth.shape[0], bool) if valid is None
+                else np.asarray(valid)[:, -1] > 0)
     import warnings
     with warnings.catch_warnings():
         warnings.simplefilter("ignore")  # constant input -> nan, handled below
-        rho = spearmanr(np.asarray(mean)[:, -1], truth[:, -1]).statistic
+        rho = (spearmanr(np.asarray(mean)[final_ok, -1],
+                         truth[final_ok, -1]).statistic
+               if int(final_ok.sum()) >= 2 else float("nan"))
     if not np.isfinite(rho):     # constant predictions -> undefined rank
         rho = 0.0
+    any_cell = bool(np.any(unobs))
     return {
-        "nll": float(np.mean(nll_cells[unobs])),
-        "mae": float(np.mean(np.abs(resid[unobs]))),
+        "nll": float(np.mean(nll_cells[unobs])) if any_cell else float("nan"),
+        "mae": (float(np.mean(np.abs(resid[unobs]))) if any_cell
+                else float("nan")),
         "rank_corr": float(rho),
     }
 
@@ -95,8 +112,15 @@ def eval_transformer(params, model_cfg: CurveTransformerConfig,
 
 def head_to_head(params, model_cfg: CurveTransformerConfig, tasks,
                  cutoffs=(0.2, 0.4, 0.7), gp_cfg: LKGPConfig | None = None,
-                 seed: int = 0, suite: str = "heldout") -> list[dict]:
-    """Score both models on identical (task, cutoff) cells; one row each."""
+                 seed: int = 0, suite: str = "heldout",
+                 valid_masks=None) -> list[dict]:
+    """Score both models on identical (task, cutoff) cells; one row each.
+
+    ``valid_masks`` (optional, one (n, m) array per task) marks the cells
+    whose ``Y_full`` is genuine ground truth — used for censored dataset
+    artifacts. Cutoff masks are intersected with it (models never observe
+    unobservable cells) and scoring is restricted to it.
+    """
     rows = []
     if tasks:
         # Untimed warm-up: the first jitted fit/forward otherwise charges
@@ -108,7 +132,12 @@ def head_to_head(params, model_cfg: CurveTransformerConfig, tasks,
         eval_lkgp(tasks[0], warm_mask, gp_cfg, seed=seed)
     for ti, task in enumerate(tasks):
         masks = cutoff_masks(task, cutoffs, seed=seed * 10_007 + ti)
+        valid = None if valid_masks is None else np.asarray(valid_masks[ti])
         for frac, mask in masks.items():
+            if valid is not None:
+                mask = mask * valid
+                if not np.any((mask == 0) & (valid > 0)):
+                    continue   # nothing scorable: every valid cell observed
             preds = {
                 "lkgp": eval_lkgp(task, mask, gp_cfg, seed=seed),
                 "transformer": eval_transformer(params, model_cfg, task,
@@ -121,6 +150,6 @@ def head_to_head(params, model_cfg: CurveTransformerConfig, tasks,
                        "predict_s": round(p["predict_s"], 4)}
                 row.update({k: round(v, 5) for k, v in
                             score_predictions(p["mean"], p["var"], task,
-                                              mask).items()})
+                                              mask, valid=valid).items()})
                 rows.append(row)
     return rows

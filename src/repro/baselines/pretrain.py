@@ -41,6 +41,11 @@ class PretrainConfig:
     n: int = 12                # configs per task
     m: int = 12                # epochs per task (fixed per pretrain run)
     d: int = 7
+    # Optional explicit progression grid (tuple for dataclass hashability;
+    # positive, strictly increasing, len == m). Set from a real dataset's
+    # budget grid so the amortized model trains on the fidelities it will
+    # be evaluated at; None keeps epochs 1..m.
+    t: tuple | None = None
     seed: int = 0
     # Curriculum: the lower bound of the observed-prefix fraction anneals
     # from floor_start to floor_end over the first curriculum_frac of steps.
@@ -65,6 +70,7 @@ def sample_stream_batch(cfg: PretrainConfig, step: int) -> dict:
     tasks = sample_suite(
         int(rng.integers(0, 2**31 - 1)), cfg.tasks_per_step,
         n=cfg.n, m=cfg.m, d=cfg.d,
+        t=None if cfg.t is None else np.asarray(cfg.t, np.float64),
         observed_fraction=(floor, cfg.prefix_cap),
         noise=float(rng.uniform(0.003, 0.03)),
         spike_prob=float(rng.uniform(0.0, 0.08)),

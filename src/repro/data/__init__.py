@@ -1,4 +1,17 @@
-"""Learning-curve prior and token pipeline."""
+"""Curve datasets: pluggable sources, artifacts, transforms, token pipeline.
+
+* :mod:`repro.data.curves`     — the synthetic LCBench-like prior +
+  :class:`CurveTask`, suite stacking, scheduler observation models.
+* :mod:`repro.data.sources`    — :class:`CurveSource` protocol + registry
+  (``get_source("synthetic:crossing")``, ``get_source("lcbench:<path>")``).
+* :mod:`repro.data.lcbench`    — LCBench/ifBO-format npz artifact IO.
+* :mod:`repro.data.transforms` — composable, invertible per-task metric /
+  progression standardization.
+"""
 from .curves import (CurveTask, benchmark_cutoffs, noisy_step_fns,
-                     sample_suite, sample_task, stack_suite)
+                     replay_step_fns, sample_suite, sample_task, stack_suite)
+from .lcbench import LCBenchArtifact, load_artifact, write_artifact
+from .sources import (CurveSource, LCBenchSource, SyntheticSource,
+                      get_source, list_source_kinds, register_source)
 from .tokens import TokenPipeline
+from .transforms import AffineTransform, Compose, LogWarp, metric_transform

@@ -11,17 +11,20 @@ early-stopping mask (each curve observed up to a random cutoff).
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import numpy as np
 
 __all__ = ["CurveTask", "sample_task", "sample_suite", "stack_suite",
-           "noisy_step_fns", "benchmark_cutoffs"]
+           "noisy_step_fns", "replay_step_fns", "benchmark_cutoffs"]
 
 
 class CurveTask(NamedTuple):
     X: np.ndarray       # (n, d) hyper-parameters in [0, 1]
-    t: np.ndarray       # (m,) epochs 1..m
+    t: np.ndarray       # (m,) progression grid: epochs 1..m, or any
+                        # positive strictly-increasing budgets (log-spaced
+                        # fidelities, step counts, ...)
     Y: np.ndarray       # (n, m) validation-accuracy-like curves
     mask: np.ndarray    # (n, m) 1.0 where observed
     Y_full: np.ndarray  # ground truth (n, m)
@@ -65,11 +68,26 @@ def sample_task(seed: int, n: int = 32, m: int = 20, d: int = 7,
                 observed_fraction: tuple[float, float] = (0.1, 0.9),
                 noise: float = 0.01, spike_prob: float = 0.05,
                 diverge_prob: float = 0.03,
-                crossing: bool = False) -> CurveTask:
+                crossing: bool = False, t: np.ndarray | None = None) -> CurveTask:
+    """Sample one task from the prior; ``t`` overrides the epoch grid.
+
+    With ``t`` given (positive, strictly increasing — e.g. log-spaced
+    budget fidelities), curves are evaluated at those progressions and
+    ``m = len(t)``; the default remains epochs ``1..m``.
+    """
     rng = np.random.default_rng(seed)
     X = rng.uniform(0, 1, (n, d))
-    t = np.arange(1.0, m + 1.0)
-    t_norm = (t - 1) / (m - 1) if m > 1 else t * 0 + 1.0
+    if t is None:
+        t = np.arange(1.0, m + 1.0)
+    else:
+        t = np.asarray(t, np.float64)
+        if t.ndim != 1 or t.shape[0] < 1 or np.any(np.diff(t) <= 0) \
+                or t[0] <= 0:
+            raise ValueError("t must be a positive strictly-increasing 1-D "
+                             f"grid, got {t}")
+        m = t.shape[0]
+    t_norm = ((t - t[0]) / (t[-1] - t[0]) if m > 1 and t[-1] > t[0]
+              else t * 0 + 1.0)
     Y = np.stack([_curve_family(rng, X[i], t_norm, crossing=crossing)
                   for i in range(n)])
 
@@ -103,13 +121,67 @@ def sample_suite(seed: int, num_tasks: int, n: int = 16, m: int = 12,
             for b in range(num_tasks)]
 
 
-def stack_suite(tasks: list[CurveTask]):
-    """Stack a shape-aligned suite into (X, t, Y, mask, Y_full) batch arrays."""
-    if len({(tk.X.shape, tk.Y.shape) for tk in tasks}) != 1:
-        raise ValueError("stack_suite needs shape-aligned tasks "
-                         "(use sample_suite)")
+def _pad_grid(t: np.ndarray, m_pad: int) -> np.ndarray:
+    """Extend a strictly-increasing grid by repeating its last step."""
+    m = t.shape[0]
+    if m_pad <= m:
+        return t
+    step = float(t[-1] - t[-2]) if m >= 2 else 1.0
+    extra = t[-1] + step * np.arange(1, m_pad - m + 1)
+    return np.concatenate([t, extra])
+
+
+def stack_suite(tasks: list[CurveTask], pad: bool = False):
+    """Stack a suite into (X, t, Y, mask, Y_full) batch arrays.
+
+    Shape-aligned suites (e.g. from :func:`sample_suite`) stack directly
+    and return a shared 1-D ``t``. Real artifact suites are usually ragged
+    (each task its own (n, m)); with ``pad=True`` they are zero-padded to
+    the max shape instead of raising: padded curve cells carry ``mask=0``
+    (so they never enter a masked likelihood), padded config rows repeat
+    the task's last config (keeping input-transform statistics in range)
+    with an all-zero mask, and each grid is extended by its own last step.
+    Padded/ragged suites return ``t`` of shape (B, m_max). Hyper-parameter
+    dimension ``d`` must match — it cannot be padded meaningfully.
+    """
+    if not tasks:
+        raise ValueError("stack_suite needs at least one task")
+    shapes = [(tk.X.shape, tk.Y.shape) for tk in tasks]
+    ds = {tk.X.shape[1] for tk in tasks}
+    if len(ds) != 1:
+        detail = ", ".join(f"task {i}: d={tk.X.shape[1]}"
+                           for i, tk in enumerate(tasks))
+        raise ValueError("stack_suite cannot align tasks with different "
+                         f"hyper-parameter dimensions ({detail})")
+    if len(set(shapes)) != 1:
+        if not pad:
+            ref = max(set(shapes), key=shapes.count)
+            offending = [f"task {i}: X{sh[0]} Y{sh[1]}"
+                         for i, sh in enumerate(shapes) if sh != ref]
+            raise ValueError(
+                "stack_suite needs shape-aligned tasks; majority shape is "
+                f"X{ref[0]} Y{ref[1]} but {'; '.join(offending)}. Pass "
+                "pad=True to zero-pad ragged tasks, or use sample_suite "
+                "for aligned synthetic suites.")
+        n_max = max(tk.X.shape[0] for tk in tasks)
+        m_max = max(tk.t.shape[0] for tk in tasks)
+        Xs, ts, Ys, masks, fulls = [], [], [], [], []
+        for tk in tasks:
+            n, m = tk.Y.shape
+            Xs.append(np.concatenate(
+                [tk.X, np.repeat(tk.X[-1:], n_max - n, axis=0)], axis=0))
+            ts.append(_pad_grid(np.asarray(tk.t, np.float64), m_max))
+            grid_pad = ((0, n_max - n), (0, m_max - m))
+            Ys.append(np.pad(tk.Y, grid_pad))
+            masks.append(np.pad(tk.mask, grid_pad))
+            fulls.append(np.pad(tk.Y_full, grid_pad))
+        return (np.stack(Xs), np.stack(ts), np.stack(Ys), np.stack(masks),
+                np.stack(fulls))
+    t0 = np.asarray(tasks[0].t)
+    ragged_t = any(not np.array_equal(np.asarray(tk.t), t0) for tk in tasks)
+    t = np.stack([tk.t for tk in tasks]) if ragged_t else tasks[0].t
     return (np.stack([tk.X for tk in tasks]),
-            tasks[0].t,
+            t,
             np.stack([tk.Y for tk in tasks]),
             np.stack([tk.mask for tk in tasks]),
             np.stack([tk.Y_full for tk in tasks]))
@@ -142,6 +214,67 @@ def noisy_step_fns(task: CurveTask, seed: int, obs_noise: float = 0.02,
     return [mk(i) for i in range(len(task.X))]
 
 
+def replay_step_fns(task: CurveTask, seed: int = 0, obs_noise: float = 0.0,
+                    spike_prob: float = 0.0, censored: bool | None = None):
+    """``noisy_step_fns``-compatible callables replaying a *loaded* task.
+
+    Drives schedulers through a real (artifact) task's recorded curves:
+    ``step()`` for config i returns the next value of ``Y_full[i]``. For a
+    censored config (artifact without post-cutoff ground truth — the
+    loader stores ``Y_full = Y`` zeroed past the early-stop mask), steps
+    beyond the observed prefix hold the last observed value rather than
+    replaying the padding zeros. ``obs_noise`` / ``spike_prob`` optionally
+    re-add an observation-stream noise model on top of the recorded
+    values (default: exact replay).
+
+    ``censored`` is the authoritative flag (pass ``not has_full[i]`` from
+    :class:`~repro.data.lcbench.LCBenchArtifact`): ``False`` means
+    ``Y_full`` is trusted everywhere (a genuinely recorded all-zero tail
+    replays as zeros), ``True`` holds the last observed value past every
+    early-stop point. ``None`` falls back to a per-config heuristic —
+    an exact-zero tail past the mask is treated as loader padding.
+    """
+    rng = np.random.default_rng(seed)
+    Y_full = np.asarray(task.Y_full, np.float64)
+    mask = np.asarray(task.mask, np.float64)
+    m = Y_full.shape[1]
+    lens = mask.sum(axis=1).astype(np.int64)
+    if censored is None:
+        # Heuristic: no information past the early-stop mask (exact zeros
+        # are the loader's fallback padding).
+        cens = [int(lens[i]) < m and not np.any(Y_full[i, int(lens[i]):])
+                for i in range(Y_full.shape[0])]
+    else:
+        cens = [bool(censored) and int(lens[i]) < m
+                for i in range(Y_full.shape[0])]
+    counters = [0] * Y_full.shape[0]
+
+    def mk(i):
+        def step():
+            e = counters[i]
+            counters[i] += 1
+            if cens[i]:
+                if lens[i] == 0:
+                    # Nothing was ever recorded; replaying the loader's
+                    # padding zeros would hand schedulers fabricated (and,
+                    # for minimized metrics, unbeatable) observations.
+                    raise RuntimeError(
+                        f"replay_step_fns: config {i} is censored with no "
+                        "observed values — nothing to replay")
+                e = min(e, int(lens[i]) - 1)
+            else:
+                e = min(e, m - 1)
+            v = Y_full[i, e]
+            if obs_noise:
+                v = v + rng.normal(0, obs_noise)
+            if spike_prob and rng.random() < spike_prob:
+                v -= rng.uniform(0.05, 0.3)
+            return float(v)
+        return step
+
+    return [mk(i) for i in range(Y_full.shape[0])]
+
+
 def benchmark_cutoffs(n_train_examples: int, n: int, m: int,
                       seed: int) -> np.ndarray:
     """ifBO-style protocol: a budget of observed values spread over configs."""
@@ -149,6 +282,13 @@ def benchmark_cutoffs(n_train_examples: int, n: int, m: int,
     lens = np.zeros(n, np.int64)
     order = rng.permutation(n)
     budget = n_train_examples
+    if budget > n * m:
+        # Without the clamp the while loop below never terminates once
+        # every lens[c] == m (no step can decrement the budget).
+        warnings.warn(f"benchmark_cutoffs: budget {n_train_examples} exceeds "
+                      f"the grid size n*m = {n * m}; clamping",
+                      stacklevel=2)
+        budget = n * m
     i = 0
     while budget > 0:
         c = order[i % n]

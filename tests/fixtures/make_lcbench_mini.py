@@ -1,0 +1,51 @@
+"""Regenerate tests/fixtures/lcbench_mini.npz (committed CI fixture).
+
+A small LCBench-format artifact sampled from the synthetic prior so CI
+stays hermetic while exercising the full real-dataset code path:
+
+* three tasks (two ``crossing``, one mixed regime) of a few dozen configs,
+* a NON-UNIFORM, log-spaced budget grid (geomspace 1..200, 12 fidelities)
+  so every consumer — K2 Gram construction across all backends, the
+  transformer's progression encoding, scheduler replay — runs off the
+  uniform ``1..m`` epoch assumption,
+* early-stop masks from the prior's random cutoffs, full ground-truth
+  curves stored (``Y_full``), plus one deliberately *censored* task
+  (``Y_full`` withheld) covering the no-ground-truth loader fallback.
+
+    PYTHONPATH=src python tests/fixtures/make_lcbench_mini.py
+"""
+import os
+
+import numpy as np
+
+from repro.data import CurveTask, sample_task, write_artifact
+
+OUT = os.path.join(os.path.dirname(__file__), "lcbench_mini.npz")
+
+
+def main(path: str = OUT) -> str:
+    t = np.geomspace(1.0, 200.0, 12)
+    tasks = [
+        sample_task(9001, n=24, d=7, t=t, noise=0.01, spike_prob=0.02,
+                    diverge_prob=0.0, crossing=True),
+        sample_task(9002, n=24, d=7, t=t, noise=0.02, spike_prob=0.04,
+                    diverge_prob=0.05, crossing=True),
+        sample_task(9003, n=20, d=7, t=t, noise=0.01, spike_prob=0.03,
+                    diverge_prob=0.03, crossing=False),
+    ]
+    # Censor the last task: real logs often have nothing past the
+    # early-stop cutoff. Y_full collapses to the masked observations.
+    c = tasks[-1]
+    tasks[-1] = CurveTask(X=c.X, t=c.t, Y=c.Y, mask=c.mask,
+                          Y_full=c.Y.copy())
+    write_artifact(path, tasks,
+                   names=["mini-crossing-a", "mini-crossing-b",
+                          "mini-mixed-censored"],
+                   metric="val_accuracy", maximize=True,
+                   extra_meta={"generator": "tests/fixtures/"
+                                            "make_lcbench_mini.py"})
+    return path
+
+
+if __name__ == "__main__":
+    print(main())

@@ -76,6 +76,38 @@ def test_run_pool_budget_and_free_history():
     assert np.isnan(pool.observed_last(3))
 
 
+def test_norm_ppf_known_quantiles():
+    """erfinv-based standard-normal quantile (scipy dropped)."""
+    from repro.autotune.predictor import _norm_ppf
+
+    known = {0.5: 0.0, 0.75: 0.6744897501, 0.84: 0.9944578832,
+             0.975: 1.9599639845, 0.25: -0.6744897501,
+             0.025: -1.9599639845, 0.999: 3.0902323062}
+    for q, v in known.items():
+        assert _norm_ppf(q) == pytest.approx(v, abs=1e-6), q
+    assert _norm_ppf(0.2) == pytest.approx(-_norm_ppf(0.8), abs=1e-12)
+    with pytest.raises(ValueError, match="quantile"):
+        _norm_ppf(0.0)
+    with pytest.raises(ValueError, match="quantile"):
+        _norm_ppf(1.0)
+
+
+def test_predictor_no_scipy_dependency():
+    """The autotune predictor module must not import scipy."""
+    import ast
+    import inspect
+
+    import repro.autotune.predictor as mod
+
+    tree = ast.parse(inspect.getsource(mod))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            assert not any(a.name.split(".")[0] == "scipy"
+                           for a in node.names)
+        if isinstance(node, ast.ImportFrom):
+            assert (node.module or "").split(".")[0] != "scipy"
+
+
 # --------------------------------------------------------------------------
 # SH / Hyperband / freeze-thaw on a recoverable synthetic task
 # --------------------------------------------------------------------------
@@ -134,6 +166,34 @@ def test_sh_rank_exhausted_budget_never_selects_unrun_config():
     sched.pool.budget = 2
     summary = sched.run()
     assert sched.pool.epochs_done[summary["selected"]] > 0
+
+
+def test_sh_replays_dataset_task_on_nonuniform_grid():
+    """End to end: an SH race over a loaded artifact task — replayed
+    curves, non-uniform (log-spaced) budget grid threaded into the model."""
+    import os
+
+    from repro.data import load_artifact, replay_step_fns
+
+    fixture = os.path.join(os.path.dirname(__file__), "fixtures",
+                           "lcbench_mini.npz")
+    task = load_artifact(fixture).tasks[0]
+    n, m = task.Y_full.shape
+    cfg = SHConfig(max_epochs=m, min_epochs=1, eta=3, promotion="lkgp",
+                   ucb_beta=0.0, refit_lbfgs_iters=5,
+                   gp=_gp(lbfgs_iters=10))
+    sched = SuccessiveHalvingScheduler(
+        task.X, replay_step_fns(task, seed=0), cfg, seed=0, t=task.t)
+    summary = sched.run(subset=list(range(8)))
+    assert 0 <= summary["selected"] < 8
+    np.testing.assert_array_equal(np.asarray(sched.predictor.t),
+                                  np.asarray(task.t))
+    np.testing.assert_array_equal(np.asarray(sched.predictor.state.t),
+                                  np.asarray(task.t))
+    # replay fidelity: every observed cell matches the recorded curve
+    obs = sched.pool.mask > 0
+    np.testing.assert_allclose(sched.pool.Y[obs],
+                               np.asarray(task.Y_full)[obs], atol=0)
 
 
 def test_hyperband_shares_pool_across_brackets():

@@ -1,0 +1,367 @@
+"""Dataset subsystem: sources, artifact IO, transforms, ragged stacking,
+replay pools, and non-uniform progression grids through the model stack."""
+import os
+import warnings
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+from repro.autotune import CurvePredictor, RunPool
+from repro.core import LKGPConfig, fit, posterior
+from repro.data import (AffineTransform, Compose, CurveTask, LogWarp,
+                        benchmark_cutoffs, get_source, list_source_kinds,
+                        load_artifact, metric_transform, replay_step_fns,
+                        sample_suite, sample_task, stack_suite,
+                        write_artifact)
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "fixtures",
+                       "lcbench_mini.npz")
+
+
+# --------------------------------------------------------------------------
+# source registry
+# --------------------------------------------------------------------------
+def test_source_registry_kinds_and_errors():
+    assert {"synthetic", "lcbench", "ifbo"} <= set(list_source_kinds())
+    with pytest.raises(ValueError, match="unknown dataset source kind"):
+        get_source("nope:whatever")
+    with pytest.raises(ValueError, match="unknown synthetic variant"):
+        get_source("synthetic:nope")
+    with pytest.raises(ValueError, match="needs a path"):
+        get_source("lcbench:")
+
+
+def test_synthetic_source_variants_deterministic():
+    src = get_source("synthetic:crossing")
+    assert src.dataset_id == "synthetic:crossing" and src.maximize
+    a = src.tasks(2, seed=5, n=6, m=7, d=5)
+    b = src.tasks(2, seed=5, n=6, m=7, d=5)
+    assert len(a) == 2 and a[0].Y.shape == (6, 7)
+    np.testing.assert_array_equal(a[0].Y, b[0].Y)
+    # matches a direct prior sample with the variant's kwargs
+    ref = sample_suite(5, 2, n=6, m=7, d=5, crossing=True, diverge_prob=0.0)
+    np.testing.assert_array_equal(a[1].Y_full, ref[1].Y_full)
+
+
+# --------------------------------------------------------------------------
+# artifact round-trip (satellite: CurveTask parity + mask semantics)
+# --------------------------------------------------------------------------
+def test_artifact_round_trip_parity(tmp_path):
+    t = np.geomspace(1.0, 100.0, 9)
+    tasks = [sample_task(1, n=7, d=4, t=t),
+             sample_task(2, n=5, m=6, d=4)]
+    path = tmp_path / "suite.npz"
+    write_artifact(path, tasks, names=["a", "b"], metric="val_accuracy",
+                   maximize=True)
+    art = load_artifact(path)
+    assert art.names == ["a", "b"] and art.maximize
+    assert art.metric == "val_accuracy"
+    assert art.has_full == [True, True]
+    for tk, got in zip(tasks, art.tasks):
+        np.testing.assert_array_equal(got.X, tk.X)
+        np.testing.assert_array_equal(got.t, tk.t)
+        np.testing.assert_array_equal(got.Y, tk.Y)
+        np.testing.assert_array_equal(got.mask, tk.mask)
+        np.testing.assert_array_equal(got.Y_full, tk.Y_full)
+        # mask semantics: Y zeroed wherever unobserved
+        assert np.all(got.Y[np.asarray(got.mask) == 0] == 0.0)
+    # and through the source registry
+    src = get_source(f"lcbench:{path}")
+    assert len(src.tasks()) == 2 and src.tasks(1)[0].Y.shape == (7, 9)
+
+
+def test_artifact_enforces_mask_on_load(tmp_path):
+    """A file storing raw values on unobserved cells comes back zeroed."""
+    task = sample_task(3, n=4, m=5, d=4)
+    path = tmp_path / "raw.npz"
+    write_artifact(path, [task])
+    with np.load(path) as z:
+        arrays = dict(z)
+    arrays["Y_0"] = np.asarray(task.Y_full)        # un-masked on disk
+    np.savez(path, **arrays)
+    got = load_artifact(path).tasks[0]
+    np.testing.assert_array_equal(got.Y, task.Y_full * task.mask)
+
+
+def test_artifact_fully_observed_task_keeps_ground_truth(tmp_path):
+    """A fully-observed task stores no Y_full copy but still round-trips
+    as has_full=True — its masked Y covers every cell."""
+    task = sample_task(8, n=4, m=5, d=4, observed_fraction=(1.0, 1.0))
+    full = CurveTask(X=task.X, t=task.t, Y=task.Y_full,
+                     mask=np.ones_like(task.mask), Y_full=task.Y_full)
+    path = tmp_path / "full.npz"
+    write_artifact(path, [full])
+    with np.load(path) as z:
+        assert "Y_full_0" not in z.files      # no redundant copy stored
+    art = load_artifact(path)
+    assert art.has_full == [True]
+    np.testing.assert_array_equal(art.tasks[0].Y_full, full.Y_full)
+
+
+def test_artifact_censored_fallback(tmp_path):
+    """No stored Y_full -> Y_full = masked Y and has_full=False."""
+    task = sample_task(4, n=5, m=6, d=4)
+    censored = CurveTask(X=task.X, t=task.t, Y=task.Y, mask=task.mask,
+                         Y_full=task.Y.copy())
+    path = tmp_path / "cens.npz"
+    write_artifact(path, [censored])
+    art = load_artifact(path)
+    assert art.has_full == [False]
+    np.testing.assert_array_equal(art.tasks[0].Y_full, censored.Y)
+
+
+def test_committed_fixture_loads():
+    art = load_artifact(FIXTURE)
+    assert len(art.tasks) == 3 and art.maximize
+    assert art.has_full == [True, True, False]
+    for tk in art.tasks:
+        t = np.asarray(tk.t)
+        assert np.all(np.diff(t) > 0)
+        # the fixture's point: a non-uniform (log-spaced) progression grid
+        assert not np.allclose(np.diff(t), t[1] - t[0])
+
+
+# --------------------------------------------------------------------------
+# transforms
+# --------------------------------------------------------------------------
+def test_affine_transform_inverse_and_var():
+    tf = AffineTransform(scale=-2.0, shift=3.0)
+    y = np.linspace(-1, 1, 7)
+    np.testing.assert_allclose(tf.inverse(tf(y)), y, atol=1e-12)
+    np.testing.assert_allclose(tf.inverse_var(np.asarray(4.0)), 1.0)
+    assert AffineTransform.sign(True)(2.5) == 2.5
+    assert AffineTransform.sign(False)(2.5) == -2.5
+
+
+def test_fit_normalize_and_compose():
+    rng = np.random.default_rng(0)
+    Y = rng.normal(5.0, 3.0, (6, 8))
+    mask = (rng.random((6, 8)) < 0.7).astype(float)
+    tf = metric_transform(maximize=False, normalize=True, Y=Y, mask=mask)
+    assert isinstance(tf, Compose)
+    Z = tf(Y)
+    obs = mask > 0
+    assert abs(np.mean(Z[obs])) < 1e-9
+    assert abs(np.std(Z[obs]) - 1.0) < 1e-9
+    np.testing.assert_allclose(tf.inverse(Z), Y, atol=1e-9)
+    # variance chains through both affine stages
+    v = tf.inverse_var(np.asarray(1.0))
+    np.testing.assert_allclose(v, np.var(Y[obs]), rtol=1e-9)
+
+
+def test_log_warp_inverse():
+    t = np.geomspace(1.0, 50.0, 6)
+    w = LogWarp(offset=0.5)
+    np.testing.assert_allclose(w.inverse(w(t)), t, atol=1e-12)
+    assert np.all(np.diff(w(t)) > 0)
+
+
+# --------------------------------------------------------------------------
+# ragged stack_suite (satellite: error message + padding path)
+# --------------------------------------------------------------------------
+def test_stack_suite_error_names_offenders():
+    tasks = sample_suite(1, 3, n=5, m=6, d=4)
+    tasks[1] = sample_task(99, n=7, m=8, d=4)
+    with pytest.raises(ValueError) as ei:
+        stack_suite(tasks)
+    msg = str(ei.value)
+    assert "task 1" in msg and "X(7, 4)" in msg and "Y(7, 8)" in msg
+    assert "pad=True" in msg
+
+
+def test_stack_suite_rejects_mismatched_d():
+    tasks = [sample_task(1, n=4, m=5, d=4), sample_task(2, n=4, m=5, d=6)]
+    with pytest.raises(ValueError, match="hyper-parameter dimensions"):
+        stack_suite(tasks, pad=True)
+
+
+def test_stack_suite_ragged_padding():
+    t_log = np.geomspace(1.0, 64.0, 7)
+    tasks = [sample_task(1, n=6, d=4, t=t_log),
+             sample_task(2, n=4, m=5, d=4)]
+    X, t, Y, mask, Y_full = stack_suite(tasks, pad=True)
+    assert X.shape == (2, 6, 4) and t.shape == (2, 7)
+    assert Y.shape == mask.shape == Y_full.shape == (2, 6, 7)
+    # original blocks intact
+    np.testing.assert_array_equal(Y[1, :4, :5], tasks[1].Y)
+    np.testing.assert_array_equal(mask[1, :4, :5], tasks[1].mask)
+    # padding carries mask 0 (never enters a masked likelihood)
+    assert np.all(mask[1, 4:, :] == 0) and np.all(mask[1, :, 5:] == 0)
+    assert np.all(Y[1, 4:, :] == 0) and np.all(Y[1, :, 5:] == 0)
+    # padded config rows repeat the last config; grids stay increasing
+    np.testing.assert_array_equal(X[1, 4], tasks[1].X[-1])
+    assert np.all(np.diff(t, axis=1) > 0)
+    # a padded batch still fits through the batched-state path
+    from repro.core import fit_batch, posterior_batch
+    state = fit_batch(X, t, Y, mask, LKGPConfig(lbfgs_iters=2))
+    mean, var = posterior_batch(state).final()
+    assert np.all(np.isfinite(np.asarray(mean)))
+
+
+def test_stack_suite_aligned_unchanged():
+    tasks = sample_suite(3, 2, n=4, m=5, d=4)
+    X, t, Y, mask, Y_full = stack_suite(tasks)
+    assert t.ndim == 1 and t.shape == (5,)       # back-compat: shared grid
+    assert X.shape == (2, 4, 4)
+
+
+# --------------------------------------------------------------------------
+# benchmark_cutoffs (satellite: infinite-loop clamp)
+# --------------------------------------------------------------------------
+def test_benchmark_cutoffs_clamps_oversized_budget():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        lens = benchmark_cutoffs(n_train_examples=10_000, n=5, m=4, seed=0)
+    assert lens.tolist() == [4] * 5
+    assert any("clamping" in str(x.message) for x in w)
+    # exact grid budget: fine without warning
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        lens = benchmark_cutoffs(20, n=5, m=4, seed=0)
+    assert lens.sum() == 20 and not w2
+
+
+# --------------------------------------------------------------------------
+# replay (RunPool replay mode over loaded tasks)
+# --------------------------------------------------------------------------
+def test_replay_step_fns_exact_and_censored():
+    art = load_artifact(FIXTURE)
+    full = art.tasks[0]
+    fns = replay_step_fns(full)
+    m = full.Y_full.shape[1]
+    got = [fns[0]() for _ in range(m)]
+    np.testing.assert_allclose(got, full.Y_full[0], atol=0)
+
+    cens = art.tasks[2]                       # censored: Y_full == masked Y
+    lens = np.asarray(cens.mask).sum(axis=1).astype(int)
+    i = int(np.argmin(lens))                  # a config stopped early
+    assert lens[i] < cens.Y_full.shape[1]
+    fns = replay_step_fns(cens)
+    vals = [fns[i]() for _ in range(cens.Y_full.shape[1])]
+    # steps past the early stop hold the last observed value, not zeros
+    assert vals[-1] == pytest.approx(cens.Y_full[i, lens[i] - 1])
+    assert vals[: lens[i]] == pytest.approx(list(cens.Y_full[i, : lens[i]]))
+
+
+def test_replay_authoritative_censor_flag_overrides_heuristic():
+    """censored=False must trust Y_full even for an exact-zero tail
+    (a genuinely recorded crash to 0), instead of fabricating a flat
+    hold-last curve; censored=True must hold past every early stop."""
+    n, m = 2, 5
+    X = np.random.default_rng(0).uniform(0, 1, (n, 4))
+    t = np.arange(1.0, m + 1.0)
+    Y_full = np.full((n, m), 0.6)
+    Y_full[0, 3:] = 0.0                 # recorded collapse to exactly zero
+    mask = np.zeros((n, m))
+    mask[:, :3] = 1.0
+    task = CurveTask(X=X, t=t, Y=Y_full * mask, mask=mask, Y_full=Y_full)
+
+    trusted = replay_step_fns(task, censored=False)
+    assert [trusted[0]() for _ in range(m)] == pytest.approx(
+        list(Y_full[0]))                # zeros replayed, not held
+    held = replay_step_fns(task, censored=True)
+    assert [held[1]() for _ in range(m)] == pytest.approx([0.6] * m)
+    # heuristic (None) treats the zero tail as loader padding -> holds
+    guess = replay_step_fns(task)
+    assert [guess[0]() for _ in range(m)] == pytest.approx([0.6] * m)
+
+
+def test_replay_refuses_never_observed_censored_config():
+    """A censored config with zero observed cells cannot be replayed —
+    step() must fail loudly instead of serving padding zeros (which a
+    minimized metric would read as an unbeatable score)."""
+    n, m = 2, 4
+    X = np.random.default_rng(0).uniform(0, 1, (n, 4))
+    t = np.arange(1.0, m + 1.0)
+    mask = np.zeros((n, m))
+    mask[0, :2] = 1.0                       # config 1 never ran
+    Y = np.full((n, m), 0.5) * mask
+    task = CurveTask(X=X, t=t, Y=Y, mask=mask, Y_full=Y.copy())
+    fns = replay_step_fns(task, censored=True)
+    assert fns[0]() == pytest.approx(0.5)   # observed prefix replays fine
+    with pytest.raises(RuntimeError, match="no observed values"):
+        fns[1]()
+
+
+def test_score_predictions_respects_valid_mask():
+    """Censored tasks: NLL/MAE and the final-value rank correlation must
+    only use cells/configs with real ground truth, and a nothing-scorable
+    row comes back NaN instead of scoring padding zeros."""
+    from repro.baselines.evaluate import score_predictions
+
+    n, m = 6, 5
+    rng = np.random.default_rng(1)
+    X = rng.uniform(0, 1, (n, 4))
+    t = np.arange(1.0, m + 1.0)
+    Y_full = rng.uniform(0.4, 0.9, (n, m))
+    art_mask = np.ones((n, m))
+    art_mask[2:, -1] = 0.0              # configs 2.. censored at the end
+    Y_full_cens = Y_full * art_mask     # loader fallback: zero padding
+    task = CurveTask(X=X, t=t, Y=Y_full_cens, mask=art_mask,
+                     Y_full=Y_full_cens)
+
+    seen = art_mask.copy()
+    seen[:, 2:] = 0.0                   # benchmark cutoff at 2 epochs
+    mean = Y_full.copy()                # a perfect predictor
+    var = np.full((n, m), 1e-4)
+    s = score_predictions(mean, var, task, seen * art_mask, valid=art_mask)
+    # perfect on every valid cell; padding zeros would make mae ~0.6
+    assert s["mae"] == pytest.approx(0.0, abs=1e-12)
+    # rank over the two configs with a valid final only — not vs zeros
+    assert s["rank_corr"] == pytest.approx(1.0)
+
+    all_seen = art_mask.copy()          # every valid cell observed
+    s2 = score_predictions(mean, var, task, all_seen, valid=art_mask)
+    assert np.isnan(s2["mae"]) and np.isnan(s2["nll"])
+
+
+def test_run_pool_replay_records_recorded_curves():
+    art = load_artifact(FIXTURE)
+    task = art.tasks[0]
+    pool = RunPool.replay(task, budget=30)
+    assert pool.max_epochs == np.asarray(task.t).shape[0]
+    pool.advance_to(0, pool.max_epochs, charge=False)
+    np.testing.assert_allclose(pool.Y[0], task.Y_full[0])
+    pool.advance_to(1, 3)
+    assert pool.spent == 3
+
+
+# --------------------------------------------------------------------------
+# non-uniform progression grids end to end
+# --------------------------------------------------------------------------
+def test_fixture_task_fits_and_predicts():
+    task = load_artifact(FIXTURE).tasks[0]
+    state = fit(task.X, task.t, task.Y, task.mask,
+                LKGPConfig(lbfgs_iters=3))
+    np.testing.assert_array_equal(np.asarray(state.t), np.asarray(task.t))
+    mean, var = posterior(state).final()
+    assert mean.shape == (task.X.shape[0],)
+    assert np.all(np.isfinite(np.asarray(mean)))
+    assert np.all(np.asarray(var) > 0)
+
+
+def test_curve_predictor_explicit_grid_and_transform():
+    task = load_artifact(FIXTURE).tasks[0]
+    n, m = task.Y_full.shape
+    pred = CurvePredictor(task.X, t=task.t, gp=LKGPConfig(lbfgs_iters=3),
+                          maximize=False)
+    assert pred.max_epochs == m
+    np.testing.assert_array_equal(pred.t, np.asarray(task.t))
+    pred.update(task.Y_full, np.ones_like(task.mask))
+    mean, std = pred.predict_final()
+    # the model state consumed the non-uniform grid
+    np.testing.assert_array_equal(np.asarray(pred.state.t),
+                                  np.asarray(task.t))
+    # score space is inverted back to raw metric units
+    np.testing.assert_allclose(pred.to_raw(mean), -mean)
+    assert np.all(std >= 0)
+    with pytest.raises(ValueError, match="disagrees"):
+        CurvePredictor(task.X, max_epochs=m + 1, t=task.t)
+    with pytest.raises(ValueError, match="strictly-increasing"):
+        CurvePredictor(task.X, t=np.asarray(task.t)[::-1])
+    with pytest.raises(ValueError, match="max_epochs or an explicit t"):
+        CurvePredictor(task.X)
