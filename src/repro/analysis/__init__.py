@@ -1,0 +1,33 @@
+"""repro.analysis — JAX/Pallas-aware static analysis for this repo.
+
+Three layers (see each module's docstring):
+
+* :mod:`repro.analysis.rules` + :mod:`repro.analysis.runner` — stdlib-AST
+  lint rules (RA101..RA106) for JAX footguns: PRNG key reuse, Python
+  control flow on traced values, host syncs in solver loops, implicit
+  dtype promotion, mutable defaults, banned imports (scipy/torch).
+* :mod:`repro.analysis.jaxpr_audit` — structural audits of the traced
+  programs: f64-free, host-callback-free, retrace-free across refits.
+* :mod:`repro.analysis.vmem` — exact VMEM budget model for the fused
+  Pallas MVM; rejects oversized block choices before ``pallas_call``.
+
+CLI: ``python -m repro.analysis src/ --baseline analysis_baseline.json``
+(the CI ``lint`` job). ``rules``/``runner``/``vmem`` are pure stdlib and
+never import jax; ``jaxpr_audit`` does and is opt-in via ``--jaxpr``.
+"""
+from .rules import ALL_RULES, RULES_BY_ID, Finding
+from .runner import (analyze_file, analyze_paths, analyze_source,
+                     filter_baseline, format_report, load_baseline,
+                     write_baseline)
+from .vmem import (VMEM_BUDGET_BYTES, VmemBudgetError, audit_candidate_space,
+                   best_fitting_blocks, check_fused_blocks,
+                   fused_vmem_breakdown, fused_vmem_bytes)
+
+__all__ = [
+    "ALL_RULES", "RULES_BY_ID", "Finding",
+    "analyze_source", "analyze_file", "analyze_paths",
+    "load_baseline", "write_baseline", "filter_baseline", "format_report",
+    "VMEM_BUDGET_BYTES", "VmemBudgetError", "fused_vmem_breakdown",
+    "fused_vmem_bytes", "check_fused_blocks", "best_fitting_blocks",
+    "audit_candidate_space",
+]

@@ -1,0 +1,241 @@
+"""Jaxpr auditors: structural invariants of the traced programs.
+
+The AST layer (:mod:`repro.analysis.rules`) sees source; this layer sees
+what JAX actually traces, which is where the paper's complexity story
+lives or dies. Three invariants:
+
+* **f64-free** — with f32 inputs, no equation converts to float64 and no
+  output is float64. A stray `np.float64` constant or Python-scalar
+  promotion under ``jax_enable_x64`` doubles memory traffic and halves
+  MXU throughput; the O(n²+m²) space claim assumes f32. Audited over
+  ``make_mll`` (dense + iterative), the fit objective, ``Posterior.final``,
+  and the fused Pallas MVM wrapper.
+* **host-callback-free** — no ``pure_callback`` / ``io_callback`` /
+  ``debug_callback`` equations: a callback inside the solver forces a
+  device→host round trip per CG iteration.
+* **retrace-free refits** — two ``refit`` rounds on same-shaped data must
+  reuse ONE compiled objective (``core.state._VG_CACHE`` entry with jit
+  cache size 1). Before PR 6 every refit rebuilt a fresh closure and
+  recompiled — O(seconds) per round of pure tracing overhead.
+
+Requires jax; the CLI keeps it behind ``--jaxpr`` so the lint layer can
+run in minimal environments.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["iter_eqns", "find_f64", "find_host_callbacks", "audit_mll",
+           "audit_fit_objective", "audit_posterior_final",
+           "audit_fused_mvm", "audit_refit_retrace", "run_all_audits"]
+
+_CALLBACK_PRIMS = ("pure_callback", "io_callback", "debug_callback",
+                   "callback")
+
+
+def iter_eqns(jaxpr):
+    """All equations of a (closed) jaxpr, recursing into sub-jaxprs."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                yield from iter_eqns(sub)
+
+
+def _sub_jaxprs(value):
+    import jax.core as jcore
+    closed = getattr(jcore, "ClosedJaxpr", ())
+    raw = getattr(jcore, "Jaxpr", ())
+    if isinstance(value, (closed, raw)):
+        yield value
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _sub_jaxprs(v)
+
+
+def _is_f64(aval) -> bool:
+    dt = getattr(aval, "dtype", None)
+    return dt is not None and dt == np.float64
+
+
+def find_f64(jaxpr) -> list[str]:
+    """Equations that introduce float64 (conversions or f64 outputs)."""
+    bad = []
+    for eqn in iter_eqns(jaxpr):
+        if (eqn.primitive.name == "convert_element_type"
+                and eqn.params.get("new_dtype") == np.float64):
+            bad.append(f"convert_element_type -> f64: {eqn}")
+            continue
+        for var in eqn.outvars:
+            if _is_f64(getattr(var, "aval", None)):
+                bad.append(f"f64 output from {eqn.primitive.name}: {eqn}")
+                break
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    for var in inner.outvars:
+        if _is_f64(getattr(var, "aval", None)):
+            bad.append("jaxpr output is f64")
+    return bad
+
+
+def find_host_callbacks(jaxpr) -> list[str]:
+    return [f"host callback: {eqn.primitive.name}"
+            for eqn in iter_eqns(jaxpr)
+            if eqn.primitive.name in _CALLBACK_PRIMS]
+
+
+# --------------------------------------------------------------------------
+# synthetic problem shared by the audits (small: tracing only, no solves)
+# --------------------------------------------------------------------------
+def _problem(n=8, m=6, d=3, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    t = np.linspace(0.1, 1.0, m).astype(np.float32)
+    Y = rng.normal(size=(n, m)).astype(np.float32)
+    mask = (rng.random((n, m)) < 0.8).astype(np.float32)
+    mask[:, 0] = 1.0
+    return X, t, Y, mask
+
+
+def _audit_jaxpr(name: str, jaxpr) -> list[str]:
+    return ([f"{name}: {msg}" for msg in find_f64(jaxpr)]
+            + [f"{name}: {msg}" for msg in find_host_callbacks(jaxpr)])
+
+
+def audit_mll() -> list[str]:
+    """Dense and iterative MLLs are f64- and callback-free on f32 input."""
+    from repro.core.engines import get_engine, make_mll
+    from repro.core.state import LKGPConfig, init_params
+    from repro.core.slq import rademacher_probes
+
+    X, t, Y, mask = _problem()
+    failures = []
+    for backend, method in (("dense", "cholesky"), ("iterative", "iterative")):
+        cfg = LKGPConfig(mll_method=method)
+        engine = get_engine(backend)
+        mll = make_mll(cfg, engine)
+        params = init_params(X.shape[1], jnp.float32)
+        probes = (None if engine.exact else rademacher_probes(
+            # Trace-only fixtures in separate audits; streams never mix.
+            jax.random.PRNGKey(0),  # lint: disable=RA101
+            cfg.slq_probes, jnp.asarray(mask), jnp.float32))
+        jaxpr = jax.make_jaxpr(
+            lambda p, x, tt, y, mk: mll(p, x, tt, y, mk, probes))(
+                params, X, t, Y, mask)
+        failures += _audit_jaxpr(f"make_mll[{backend}]", jaxpr)
+    return failures
+
+
+def audit_fit_objective() -> list[str]:
+    """The cached fit objective (value+grad) is f64/callback-free."""
+    from repro.core.engines import get_engine
+    from repro.core.state import LKGPConfig, _cached_fit_vg, init_params
+    from repro.core.slq import rademacher_probes
+
+    X, t, Y, mask = _problem()
+    failures = []
+    for backend, method in (("dense", "cholesky"), ("iterative", "iterative")):
+        cfg = LKGPConfig(mll_method=method)
+        engine = get_engine(backend)
+        vg = _cached_fit_vg(cfg, engine, X.shape[1])
+        params = init_params(X.shape[1], jnp.float32)
+        probes = (None if engine.exact else rademacher_probes(
+            # Trace-only fixtures in separate audits; streams never mix.
+            jax.random.PRNGKey(0),  # lint: disable=RA101
+            cfg.slq_probes, jnp.asarray(mask), jnp.float32))
+        jaxpr = jax.make_jaxpr(
+            lambda p, x, tt, y, mk: vg(p, x, tt, y, mk, probes))(
+                params, X, t, Y, mask)
+        failures += _audit_jaxpr(f"fit_objective[{backend}]", jaxpr)
+    return failures
+
+
+def audit_posterior_final() -> list[str]:
+    """Posterior.final's traced computation is f64/callback-free.
+
+    The engine is passed explicitly: Posterior.__init__ otherwise counts
+    observations with host numpy, which cannot be traced.
+    """
+    from repro.core.engines import get_engine
+    from repro.core.posterior import Posterior
+    from repro.core.state import LKGPConfig, fit
+
+    X, t, Y, mask = _problem()
+    state = fit(X, t, Y, mask, LKGPConfig(lbfgs_iters=2))
+    engine = get_engine("dense")
+
+    def final_of(Y_):
+        import dataclasses
+        st = dataclasses.replace(state, Y=Y_)
+        mean, var = Posterior(st, engine=engine).final()
+        return mean, var
+
+    jaxpr = jax.make_jaxpr(final_of)(jnp.asarray(Y, jnp.float32))
+    return _audit_jaxpr("Posterior.final", jaxpr)
+
+
+def audit_fused_mvm() -> list[str]:
+    """The fused Pallas MVM wrapper is f64/callback-free at f32."""
+    from repro.kernels.lk_mvm import lk_mvm_fused
+
+    rng = np.random.default_rng(0)
+    n, m, B = 16, 8, 2
+    K1 = rng.normal(size=(n, n)).astype(np.float32)
+    K2 = rng.normal(size=(m, m)).astype(np.float32)
+    mask = (rng.random((n, m)) < 0.8).astype(np.float32)
+    u = rng.normal(size=(B, n, m)).astype(np.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda a, b, c, d: lk_mvm_fused(a, b, c, d, 0.1, block_n=16,
+                                        block_m=16, interpret=True))(
+                                            K1, K2, mask, u)
+    return _audit_jaxpr("lk_mvm_fused", jaxpr)
+
+
+def audit_refit_retrace() -> list[str]:
+    """Two same-shape refits reuse one compiled objective (no retrace)."""
+    from repro.core import state as state_mod
+    from repro.core.state import LKGPConfig, fit, refit
+
+    X, t, Y, mask = _problem(n=10, m=6)
+    state_mod._VG_CACHE.clear()
+    cfg = LKGPConfig(mll_method="iterative", lbfgs_iters=3)
+    st = fit(X, t, Y, mask, cfg)
+    st = refit(st, lbfgs_iters=2)
+    st = refit(st, lbfgs_iters=2)
+    failures = []
+    if len(state_mod._VG_CACHE) != 1:
+        failures.append(
+            f"refit retrace: expected 1 cached objective, found "
+            f"{len(state_mod._VG_CACHE)} — the objective cache key is "
+            "unstable across refits")
+    for key, vg in state_mod._VG_CACHE.items():
+        n_traces = vg._cache_size()
+        if n_traces != 1:
+            failures.append(
+                f"refit retrace: objective for key {key[0]!r} traced "
+                f"{n_traces} times across same-shaped refits")
+    return failures
+
+
+def run_all_audits(verbose: bool = False) -> list[str]:
+    """Run every auditor; returns the list of failure messages."""
+    audits = [("mll f64/callback", audit_mll),
+              ("fit objective f64/callback", audit_fit_objective),
+              ("Posterior.final f64/callback", audit_posterior_final),
+              ("fused MVM f64/callback", audit_fused_mvm),
+              ("refit retrace", audit_refit_retrace)]
+    failures: list[str] = []
+    for name, fn in audits:
+        try:
+            fails = fn()
+        except Exception as e:   # audit infrastructure failure is a failure
+            fails = [f"{name}: auditor raised {type(e).__name__}: {e}"]
+        failures += fails
+        if verbose:
+            status = "ok" if not fails else f"FAIL ({len(fails)})"
+            print(f"jaxpr audit: {name}: {status}")
+    for msg in failures:
+        print(f"jaxpr audit failure: {msg}")
+    return failures

@@ -1,0 +1,203 @@
+"""Static VMEM budget checker for the fused latent-Kronecker MVM kernel.
+
+``lk_mvm_fused`` (:mod:`repro.kernels.lk_mvm`) keeps, per grid step, a
+K1 block, a full U row strip, a full mask row strip, a full K2 column
+strip, the output block, and three f32 scratch tiles resident in VMEM.
+TPU VMEM is ~16 MiB per core; a (block_n, block_m) choice whose resident
+set exceeds it fails at ``pallas_call`` compile time on hardware — long
+after the autotuner committed to it, and invisibly on CPU where the
+kernel runs in interpret mode. This module computes the **exact** bytes
+implied by a block choice (including (sublane, lane) tile rounding and
+the pipeline's double buffering) so oversized configurations are rejected
+*before* ``pallas_call`` ever runs:
+
+* :func:`fused_vmem_breakdown` / :func:`fused_vmem_bytes` — the byte
+  model, mirroring the kernel's BlockSpecs one-to-one;
+* :func:`check_fused_blocks` — raise :class:`VmemBudgetError` when a
+  choice exceeds the budget (called by ``lk_mvm_fused`` itself);
+* :func:`best_fitting_blocks` — the largest-throughput candidate pair
+  that fits (used by the autotuner to filter its sweep);
+* :func:`audit_candidate_space` — sweep representative shape buckets and
+  report every (shape, candidate) combination the autotuner could emit
+  that does not fit; after PR 6 the *filtered* sweep is provably clean
+  while the raw {64, 128, 256} grid is not (see tests/test_analysis.py).
+
+Pure stdlib — importable (and CI-checkable) without jax.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["VMEM_BUDGET_BYTES", "VmemBudgetError", "VmemBreakdown",
+           "fused_vmem_breakdown", "fused_vmem_bytes", "check_fused_blocks",
+           "best_fitting_blocks", "audit_candidate_space"]
+
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024   # 16 MiB per TPU core
+
+# Matches repro.kernels.lk_mvm: candidate sweep and minimum block edges.
+_CANDIDATES = (64, 128, 256)
+_MIN_EDGE = {"f32": 8, "bf16": 16}
+_ITEMSIZE = {"f32": 4, "bf16": 2}
+# itemsize -> sublane multiple; lane is always 128. The 8-byte entry
+# covers f64 outputs in interpret-mode tests (x64 enabled on CPU; real
+# TPUs never see f64 tiles).
+_SUBLANE = {4: 8, 2: 16, 8: 8}
+_LANE = 128
+
+
+class VmemBudgetError(ValueError):
+    """A (block_n, block_m) choice does not fit the per-core VMEM budget."""
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _tile_bytes(rows: int, cols: int, itemsize: int) -> int:
+    """Bytes of a 2-D VMEM buffer after (sublane, lane) tile rounding."""
+    r = _round_up(max(rows, 1), _SUBLANE[itemsize])
+    c = _round_up(max(cols, 1), _LANE)
+    return r * c * itemsize
+
+
+def effective_blocks(n: int, m: int, block_n: int, block_m: int,
+                     precision: str = "f32") -> tuple[int, int, int]:
+    """(bn, bm, mpad) exactly as ``lk_mvm_fused`` derives them."""
+    min_edge = _MIN_EDGE[precision]
+    bn = min(block_n, max(min_edge, n))
+    bm = min(block_m, max(min_edge, m))
+    mpad = _round_up(m, bm)
+    return bn, bm, mpad
+
+
+@dataclass(frozen=True)
+class VmemBreakdown:
+    """Exact per-grid-step VMEM bytes of ``lk_mvm_fused``."""
+    k1_block: int        # (bn, bn) K1 tile
+    u_strip: int         # (bn, mpad) U row strip
+    mask_strip: int      # (bn, mpad) mask row strip
+    k2_strip: int        # (mpad, bm) K2 column strip
+    out_block: int       # (bn, bm) output tile
+    scratch: int         # 3 x (bn, bm) f32 (accumulator + epilogue tiles)
+    double_buffered: int # pipelined copies of inputs + output
+    total: int
+
+    def fits(self, budget: int = VMEM_BUDGET_BYTES) -> bool:
+        return self.total <= budget
+
+
+def fused_vmem_breakdown(n: int, m: int, block_n: int, block_m: int,
+                         precision: str = "f32",
+                         out_itemsize: int = 4) -> VmemBreakdown:
+    """Byte-exact VMEM model of one ``lk_mvm_fused`` grid step.
+
+    Mirrors the kernel's BlockSpecs: inputs and the output are double
+    buffered by the Pallas pipeline (two resident copies each); the three
+    scratch tiles are single f32 buffers. ``B`` does not appear: the batch
+    axis is the outermost grid dimension, one b per step.
+    """
+    if precision not in _ITEMSIZE:
+        raise ValueError(f"precision must be 'f32' or 'bf16', "
+                         f"got {precision!r}")
+    ib = _ITEMSIZE[precision]
+    bn, bm, mpad = effective_blocks(n, m, block_n, block_m, precision)
+    k1 = _tile_bytes(bn, bn, ib)
+    u = _tile_bytes(bn, mpad, ib)
+    mask = _tile_bytes(bn, mpad, ib)
+    k2 = _tile_bytes(mpad, bm, ib)
+    out = _tile_bytes(bn, bm, out_itemsize)
+    scratch = 3 * _tile_bytes(bn, bm, 4)
+    inputs_once = k1 + u + mask + k2
+    double = inputs_once + out     # the second pipelined copy of each
+    total = 2 * inputs_once + 2 * out + scratch
+    return VmemBreakdown(k1_block=k1, u_strip=u, mask_strip=mask,
+                         k2_strip=k2, out_block=out, scratch=scratch,
+                         double_buffered=double, total=total)
+
+
+def fused_vmem_bytes(n: int, m: int, block_n: int, block_m: int,
+                     precision: str = "f32", out_itemsize: int = 4) -> int:
+    return fused_vmem_breakdown(n, m, block_n, block_m, precision,
+                                out_itemsize).total
+
+
+def check_fused_blocks(n: int, m: int, block_n: int, block_m: int,
+                       precision: str = "f32", out_itemsize: int = 4,
+                       budget: int = VMEM_BUDGET_BYTES) -> VmemBreakdown:
+    """Raise :class:`VmemBudgetError` if the choice exceeds the budget."""
+    bd = fused_vmem_breakdown(n, m, block_n, block_m, precision,
+                              out_itemsize)
+    if not bd.fits(budget):
+        bn, bm, mpad = effective_blocks(n, m, block_n, block_m, precision)
+        raise VmemBudgetError(
+            f"lk_mvm_fused blocks (block_n={block_n}, block_m={block_m}) "
+            f"at shape (n={n}, m={m}, {precision}) need {bd.total} bytes "
+            f"of VMEM (> budget {budget}): the (bn={bn}, mpad={mpad}) row "
+            f"strips alone are {bd.u_strip + bd.mask_strip} bytes. Use "
+            "smaller blocks, or the two-stage kernel (fused=False) whose "
+            "intermediate lives in HBM.")
+    return bd
+
+
+def _grid_steps(n: int, m: int, bn: int, bm: int) -> int:
+    """Grid work per batch item: (n/bn rows) x (m/bm cols) x (n/bn k-sweep)."""
+    gn = -(-n // bn)
+    gm = -(-m // bm)
+    return gn * gm * gn
+
+
+def best_fitting_blocks(n: int, m: int, precision: str = "f32",
+                        out_itemsize: int = 4,
+                        candidates: tuple[int, ...] = _CANDIDATES,
+                        budget: int = VMEM_BUDGET_BYTES
+                        ) -> tuple[int, int] | None:
+    """The fitting candidate pair with the fewest grid steps, or None.
+
+    Fewest grid steps == fewest stage-R recomputes (the analytic optimum
+    the autotuner's heuristic mode targets); ties break toward larger
+    blocks. Returns None when no candidate pair fits — the fused kernel
+    cannot run this shape within budget and callers must fall back to the
+    two-stage kernel.
+    """
+    best: tuple[int, int] | None = None
+    best_key: tuple | None = None
+    for bn in candidates:
+        for bm in candidates:
+            if not fused_vmem_breakdown(n, m, bn, bm, precision,
+                                        out_itemsize).fits(budget):
+                continue
+            key = (_grid_steps(n, m, *effective_blocks(
+                n, m, bn, bm, precision)[:2]), -bn, -bm)
+            if best_key is None or key < best_key:
+                best, best_key = (bn, bm), key
+    return best
+
+
+def audit_candidate_space(shapes=None,
+                          candidates: tuple[int, ...] = _CANDIDATES,
+                          budget: int = VMEM_BUDGET_BYTES) -> list[dict]:
+    """Every (shape, precision, candidate) combination over budget.
+
+    ``shapes`` defaults to the power-of-two (n, m) buckets the autotuner
+    caches on, up to (8192, 8192) — the paper's target regime. The
+    returned rows are what the raw {64, 128, 256} sweep *could* pick
+    without the VMEM filter; an empty result for the filtered chooser
+    (:func:`best_fitting_blocks` composed over the same shapes) is the
+    invariant the CI gate enforces.
+    """
+    if shapes is None:
+        buckets = [2 ** k for k in range(3, 14)]        # 8 .. 8192
+        shapes = [(n, m) for n in buckets for m in buckets]
+    rows = []
+    for n, m in shapes:
+        for precision in ("f32", "bf16"):
+            for bn in candidates:
+                for bm in candidates:
+                    bd = fused_vmem_breakdown(n, m, bn, bm, precision)
+                    if not bd.fits(budget):
+                        rows.append({
+                            "n": n, "m": m, "precision": precision,
+                            "block_n": bn, "block_m": bm,
+                            "bytes": bd.total, "budget": budget,
+                        })
+    return rows

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import time
 
-import jax
 import numpy as np
 
 from ..core import LKGPConfig, fit, posterior
@@ -38,10 +37,43 @@ def cutoff_masks(task: CurveTask, cutoffs, seed: int) -> dict:
     anchor = int(np.random.default_rng(seed).integers(0, n))
     out = {}
     for frac in cutoffs:
-        lens = np.full(n, max(1, int(round(frac * m))), np.int64)
+        # Host-side mask construction over Python floats, no device value.
+        lens = np.full(n, max(1, int(round(frac * m))),  # lint: disable=RA103
+                       np.int64)
         lens[anchor] = m
         out[frac] = (np.arange(m)[None, :] < lens[:, None]).astype(np.float64)
     return out
+
+
+def _rank_with_ties(x: np.ndarray) -> np.ndarray:
+    """Average-tie ranks (1-based), matching scipy.stats.rankdata."""
+    order = np.argsort(x, kind="stable")
+    ranks = np.empty(len(x), np.float64)
+    i = 0
+    while i < len(x):
+        j = i
+        while j + 1 < len(x) and x[order[j + 1]] == x[order[i]]:
+            j += 1
+        ranks[order[i:j + 1]] = 0.5 * (i + j) + 1.0
+        i = j + 1
+    return ranks
+
+
+def _spearman(a, b) -> float:
+    """Spearman rank correlation via Pearson on average-tie ranks.
+
+    Matches ``scipy.stats.spearmanr(a, b).statistic`` (which this repo
+    must not depend on — lint rule RA106); constant input gives nan, as
+    scipy's does under its ConstantInputWarning.
+    """
+    ra, rb = _rank_with_ties(np.asarray(a, np.float64)), \
+        _rank_with_ties(np.asarray(b, np.float64))
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = np.sqrt((ra * ra).sum() * (rb * rb).sum())
+    if denom == 0.0:
+        return float("nan")
+    return float((ra * rb).sum() / denom)
 
 
 def score_predictions(mean, var, task: CurveTask, mask, valid=None) -> dict:
@@ -55,8 +87,6 @@ def score_predictions(mean, var, task: CurveTask, mask, valid=None) -> dict:
     cell at all, NLL/MAE come back NaN (callers should skip such rows —
     ``head_to_head`` does).
     """
-    from scipy.stats import spearmanr
-
     truth = task.Y_full
     unobs = np.asarray(mask) == 0
     if valid is not None:
@@ -67,12 +97,8 @@ def score_predictions(mean, var, task: CurveTask, mask, valid=None) -> dict:
                                         np.sqrt(var), truth))
     final_ok = (np.ones(truth.shape[0], bool) if valid is None
                 else np.asarray(valid)[:, -1] > 0)
-    import warnings
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore")  # constant input -> nan, handled below
-        rho = (spearmanr(np.asarray(mean)[final_ok, -1],
-                         truth[final_ok, -1]).statistic
-               if int(final_ok.sum()) >= 2 else float("nan"))
+    rho = (_spearman(np.asarray(mean)[final_ok, -1], truth[final_ok, -1])
+           if int(final_ok.sum()) >= 2 else float("nan"))
     if not np.isfinite(rho):     # constant predictions -> undefined rank
         rho = 0.0
     any_cell = bool(np.any(unobs))
@@ -132,7 +158,9 @@ def head_to_head(params, model_cfg: CurveTransformerConfig, tasks,
         eval_lkgp(tasks[0], warm_mask, gp_cfg, seed=seed)
     for ti, task in enumerate(tasks):
         masks = cutoff_masks(task, cutoffs, seed=seed * 10_007 + ti)
-        valid = None if valid_masks is None else np.asarray(valid_masks[ti])
+        # Eval harness: valid_masks arrive as host numpy artifacts.
+        valid = (None if valid_masks is None
+                 else np.asarray(valid_masks[ti]))  # lint: disable=RA103
         for frac, mask in masks.items():
             if valid is not None:
                 mask = mask * valid
@@ -144,7 +172,8 @@ def head_to_head(params, model_cfg: CurveTransformerConfig, tasks,
                                                 mask),
             }
             for name, p in preds.items():
-                row = {"suite": suite, "task": ti, "cutoff": float(frac),
+                row = {"suite": suite, "task": ti,
+                       "cutoff": float(frac),  # lint: disable=RA103
                        "model": name,
                        "fit_s": round(p["fit_s"], 4),
                        "predict_s": round(p["predict_s"], 4)}

@@ -113,7 +113,9 @@ def pretrain(model_cfg: CurveTransformerConfig,
             batch = {k: jnp.asarray(v)
                      for k, v in sample_stream_batch(cfg, step).items()}
             state, metrics = setup.step_fn(state, batch)
-            losses.append(float(metrics["loss"]))
+            # Keep the device scalar: float() here would block on the
+            # accelerator every step and kill async dispatch (RA103).
+            losses.append(metrics["loss"])
             if cfg.log_every and (step + 1) % cfg.log_every == 0:
                 out(f"pretrain step {step + 1:5d}  nll "
                     f"{np.mean(losses[-cfg.log_every:]):.4f}  "

@@ -88,13 +88,30 @@ def register_engine(name: str):
     return deco
 
 
+_ENGINE_SINGLETONS: dict = {}
+
+
 def get_engine(name: str, **kwargs) -> "InferenceEngine":
+    """Engine by backend name; kwargs-free lookups return a singleton.
+
+    The singleton matters beyond saving an allocation: the jitted fit
+    objective is cached keyed on engine *identity* (see
+    ``core.state._cached_fit_vg``), so config-resolved engines must be
+    the same object across ``fit``/``refit`` rounds or every refit would
+    retrace and recompile. Engines are stateless, so sharing is safe.
+    Custom-configured engines (``kwargs`` given) are built fresh.
+    """
     try:
         cls = ENGINES[name]
     except KeyError:
         raise ValueError(f"unknown backend {name!r}; "
                          f"available: {sorted(ENGINES)}") from None
-    return cls(**kwargs)
+    if kwargs:
+        return cls(**kwargs)
+    engine = _ENGINE_SINGLETONS.get(name)
+    if engine is None:
+        engine = _ENGINE_SINGLETONS[name] = cls()
+    return engine
 
 
 def list_backends() -> list[str]:
@@ -115,7 +132,7 @@ class _DenseOperator:
 
     def __init__(self, K1, K2, mask, noise):
         self.K1, self.K2, self.mask, self.noise = K1, K2, mask, noise
-        self._chol = None
+        self._chol: jnp.ndarray | None = None
 
     def __call__(self, u):
         return lk_mvm(self.K1, self.K2, self.mask, u, self.noise)

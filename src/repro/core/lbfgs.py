@@ -7,6 +7,9 @@ called O(100) times); the objective itself should be jitted by the caller.
 
 Operates on flat vectors; use ``jax.flatten_util.ravel_pytree`` to adapt.
 """
+# lint: disable-file=RA103 -- the Python driver loop is the design here:
+# the jitted objective is called O(100) times and each Wolfe/curvature
+# decision genuinely needs the scalar on host. See module docstring.
 from __future__ import annotations
 
 from typing import Callable, NamedTuple

@@ -25,6 +25,8 @@ should prefer the functional API::
 """
 from __future__ import annotations
 
+from typing import Any
+
 # Re-exports: the historical public surface of this module.
 from .engines import (CustomMVMEngine, DenseEngine, DistributedEngine,
                       InferenceEngine, IterativeEngine, PallasEngine,
@@ -63,7 +65,7 @@ class LKGP:
     def __init__(self, config: LKGPConfig | None = None):
         self.config = config if config is not None else LKGPConfig()
         self.state: LKGPState | None = None
-        self.fit_result = None
+        self.fit_result: Any = None
         self.mll_method_used: str | None = None
 
     # -- fitting ----------------------------------------------------------

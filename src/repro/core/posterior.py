@@ -25,6 +25,7 @@ same backend — dense, iterative, pallas, or distributed — as fitting.
 from __future__ import annotations
 
 from functools import cached_property
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -82,8 +83,8 @@ class Posterior:
             n_obs = int(np.sum(np.asarray(state.mask)))
             engine = get_engine(resolve_backend(state.config, n_obs))
         self._engine = engine
-        self._alpha = None       # cached K^{-1}(Y * mask), grid form
-        self._solve_info = None  # CGResult of the most recent engine solve
+        self._alpha: jnp.ndarray | None = None   # cached K^{-1}(Y*mask)
+        self._solve_info: Any = None  # CGResult of most recent engine solve
 
     # -- cached pieces -----------------------------------------------------
     @cached_property
@@ -162,7 +163,11 @@ class Posterior:
     @cached_property
     def _default_samples(self):
         cfg = self._state.config
-        return self.samples(jax.random.PRNGKey(cfg.seed + 1))
+        # fold_in tag 1: the cached default-sample stream. final()'s
+        # explicit-key fallback uses tag 2 so the two paths never share
+        # randomness (they used to both build PRNGKey(seed + 1)).
+        key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), 1)
+        return self.samples(key)
 
     @property
     def variance(self) -> jnp.ndarray:
@@ -185,7 +190,9 @@ class Posterior:
             s = self._default_samples[:, :, -1]   # cached; same default key
         else:
             if key is None:
-                key = jax.random.PRNGKey(st.config.seed + 1)
+                # tag 2: distinct from the _default_samples stream (tag 1).
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(st.config.seed), 2)
             s = self.samples(key, n_samples)[:, :, -1]
         mean = self.mean[:, -1]
         var_f = jnp.var(s, axis=0)

@@ -51,7 +51,9 @@ def pivoted_cholesky_latent(K1, K2, mask, rank: int, jitter: float = 1e-12):
 
     for k in range(rank):
         # pivot: largest remaining diagonal
-        j = k + int(np.argmax(d[perm[k:]]))
+        # Pivoted-Cholesky setup runs once on host numpy inputs; the
+        # pivot index must be a Python int to permute in place.
+        j = k + int(np.argmax(d[perm[k:]]))  # lint: disable=RA103
         perm[[k, j]] = perm[[j, k]]
         p = perm[k]
         pivot = d[p]

@@ -18,11 +18,10 @@ is O(n^2/p + m^2), so a 100k-config sweep fits a pod.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from ..compat import shard_map
 
 from ..core.gp_kernels import KERNELS_1D, rbf_ard

@@ -27,12 +27,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis.vmem import best_fitting_blocks, fused_vmem_breakdown
+
 __all__ = ["CANDIDATE_BLOCKS", "autotune_blocks", "clear_cache",
            "cache_contents"]
 
 CANDIDATE_BLOCKS = (64, 128, 256)
 
-_CACHE: dict[tuple, tuple[int, int]] = {}
+_CACHE: dict[tuple, "tuple[int, int] | None"] = {}
+_MISS = object()   # cached None is a real answer ("no candidate fits")
 
 
 def _bucket(x: int) -> int:
@@ -51,21 +54,39 @@ def cache_contents() -> dict:
     return dict(_CACHE)
 
 
-def _heuristic(n: int, m: int) -> tuple[int, int]:
-    """Smallest candidate covering each axis (single-sweep regime)."""
+def _heuristic(n: int, m: int,
+               precision: str = "f32") -> tuple[int, int] | None:
+    """Smallest candidate covering each axis (single-sweep regime).
+
+    VMEM-guarded since PR 6: if the covering pair does not fit the 16 MiB
+    budget (``repro.analysis.vmem``), fall back to the best *fitting*
+    candidate; None when no candidate fits at all — the fused kernel
+    cannot run this shape and callers must take the two-stage path.
+    """
     bn = next((c for c in CANDIDATE_BLOCKS if c >= n), CANDIDATE_BLOCKS[-1])
     bm = next((c for c in CANDIDATE_BLOCKS if c >= m), CANDIDATE_BLOCKS[-1])
-    return bn, bm
+    if fused_vmem_breakdown(n, m, bn, bm, precision).fits():
+        return bn, bm
+    return best_fitting_blocks(n, m, precision,
+                               candidates=CANDIDATE_BLOCKS)
 
 
-def _candidate_pairs(n: int, m: int):
-    """Deduplicated candidate pairs after clamping to the padded shape."""
+def _candidate_pairs(n: int, m: int, precision: str = "f32"):
+    """Deduplicated, VMEM-fitting candidate pairs for the timed sweep.
+
+    Oversized pairs are excluded *statically*: on TPU they would fail at
+    Mosaic compile time (wasting a sweep slot), and in interpret mode
+    they would time fine and poison the cache with a config that OOMs on
+    hardware.
+    """
     seen, pairs = set(), []
     for bn in CANDIDATE_BLOCKS:
         for bm in CANDIDATE_BLOCKS:
             eff = (min(bn, _bucket(max(8, n))), min(bm, _bucket(max(8, m))))
-            if eff not in seen:
-                seen.add(eff)
+            if eff in seen:
+                continue
+            seen.add(eff)
+            if fused_vmem_breakdown(n, m, bn, bm, precision).fits():
                 pairs.append((bn, bm))
     return pairs
 
@@ -76,7 +97,8 @@ def _time_candidate(fn, args, reps: int = 3) -> float:
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
+        # Timing harness: the per-iteration sync IS the measurement.
+        jax.block_until_ready(fn(*args))  # lint: disable=RA103
         best = min(best, time.perf_counter() - t0)
     return best
 
@@ -84,7 +106,7 @@ def _time_candidate(fn, args, reps: int = 3) -> float:
 def autotune_blocks(n: int, m: int, B: int = 1, *, precision: str = "f32",
                     timed: bool | None = None,
                     interpret: bool | None = None,
-                    atol: float = 1e-4) -> tuple[int, int]:
+                    atol: float = 1e-4) -> tuple[int, int] | None:
     """Pick (block_n, block_m) for the fused kernel at shape (B, n, m).
 
     ``timed=None`` resolves to True on TPU and False elsewhere. Timed
@@ -92,16 +114,22 @@ def autotune_blocks(n: int, m: int, B: int = 1, *, precision: str = "f32",
     that fail; a fully-failing sweep falls back to the heuristic. Safe to
     call at ``jit`` trace time with ``timed=False`` (pure-python cache
     lookup / heuristic — no compilation, no timing).
+
+    Every candidate considered (timed or heuristic) is pre-filtered
+    against the exact VMEM budget model (:mod:`repro.analysis.vmem`).
+    Returns ``None`` when *no* candidate fits — e.g. m >= 8192, where a
+    single row strip exceeds 16 MiB — meaning the fused kernel cannot run
+    this shape and the caller must use the two-stage kernel.
     """
     key = (_bucket(n), _bucket(m), _bucket(max(B, 1)), precision,
            jax.default_backend())
-    hit = _CACHE.get(key)
-    if hit is not None:
+    hit = _CACHE.get(key, _MISS)
+    if hit is not _MISS:
         return hit
     if timed is None:
         timed = jax.default_backend() == "tpu"
     if not timed:
-        blocks = _heuristic(n, m)
+        blocks = _heuristic(n, m, precision)
         _CACHE[key] = blocks
         return blocks
 
@@ -123,13 +151,15 @@ def autotune_blocks(n: int, m: int, B: int = 1, *, precision: str = "f32",
     scale = max(1.0, float(np.max(np.abs(ref))))
 
     best, best_t = None, float("inf")
-    for bn, bm in _candidate_pairs(nb, mb):
+    for bn, bm in _candidate_pairs(nb, mb, precision):
         def run(K1, K2, mask, u, _bn=bn, _bm=bm):
             return lk_mvm_fused(K1, K2, mask, u, 0.1, block_n=_bn,
                                 block_m=_bm, precision=precision,
                                 interpret=interpret)
         try:
-            out = np.asarray(run(K1, K2, mask, u))
+            # Correctness screen of each candidate against the dense
+            # reference needs the values on host.
+            out = np.asarray(run(K1, K2, mask, u))  # lint: disable=RA103
         except Exception:
             continue
         tol = atol * scale if precision == "f32" else 0.1 * scale
@@ -139,6 +169,6 @@ def autotune_blocks(n: int, m: int, B: int = 1, *, precision: str = "f32",
         if t < best_t:
             best, best_t = (bn, bm), t
     if best is None:
-        best = _heuristic(n, m)
+        best = _heuristic(n, m, precision)
     _CACHE[key] = best
     return best

@@ -45,6 +45,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..analysis.vmem import check_fused_blocks
+
 __all__ = ["lk_mvm_pallas", "lk_mvm_fused", "lk_mvm_two_stage"]
 
 
@@ -227,6 +229,12 @@ def lk_mvm_fused(K1: jnp.ndarray, K2: jnp.ndarray, mask: jnp.ndarray,
     min_edge = 16 if precision == "bf16" else 8
     bn = min(block_n, max(min_edge, n))
     bm = min(block_m, max(min_edge, m))
+    # Static VMEM guard (trace time, shapes only): an oversized block
+    # choice fails here with an actionable message instead of at Mosaic
+    # compile time on TPU — or worse, "working" in interpret mode on CPU
+    # and OOMing the first time the same trace reaches hardware.
+    check_fused_blocks(n, m, block_n, block_m, precision,
+                       out_itemsize=jnp.dtype(dtype).itemsize)
     if precision == "bf16":
         K1 = K1.astype(jnp.bfloat16)
         K2 = K2.astype(jnp.bfloat16)

@@ -33,8 +33,15 @@ def lk_mvm_op(K1, K2, mask, u, noise=0.0, *, force_pallas: bool = False,
                 B *= s
             # timed=False: safe at jit trace time (cache lookup/heuristic
             # only); benchmarks pre-fill the cache with timed results.
-            bn, bm = autotune_blocks(n, m, B, precision=precision,
+            blocks = autotune_blocks(n, m, B, precision=precision,
                                      timed=False)
+            if blocks is None:
+                # No candidate fits the VMEM budget at this shape (e.g.
+                # m >= 8192: one fused row strip alone exceeds 16 MiB).
+                # The two-stage kernel keeps its intermediate in HBM.
+                fused = False
+                blocks = (128, 128)
+            bn, bm = blocks
             block_n = block_n if block_n is not None else bn
             block_m = block_m if block_m is not None else bm
         return lk_mvm_pallas(K1, K2, mask, u, noise,

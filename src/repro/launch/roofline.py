@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import glob
 import json
-import math
 import os
 
 from ..configs import SHAPES, get_config

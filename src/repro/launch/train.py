@@ -10,12 +10,10 @@ restore works across device counts (mesh-independent checkpoint layout).
 """
 import argparse
 import os
-import sys
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint import CheckpointManager
 from ..configs import get_config, get_smoke_config
@@ -99,7 +97,10 @@ def main(argv=None):
                  for k, v in batch.items()}, mesh)
             batch = {k: jax.device_put(v, sh[k]) for k, v in batch.items()}
             state, metrics = setup.step_fn(state, batch)
-            losses.append(float(metrics["loss"]))
+            # Device scalar stays on device: a float() here is one host
+            # sync per step and stalls async dispatch (RA103). Converted
+            # in bulk after the loop.
+            losses.append(metrics["loss"])
             if (step + 1) % args.log_every == 0:
                 dt = (time.time() - t0) / args.log_every
                 print(f"step {step+1:5d} loss {losses[-1]:.4f} "
@@ -115,6 +116,7 @@ def main(argv=None):
         if ckpt:
             ckpt.save(args.steps, state)
             ckpt.wait()
+    losses = [float(x) for x in losses]
     print(f"final loss: {losses[-1]:.4f} (first: {losses[0]:.4f})")
     return losses
 

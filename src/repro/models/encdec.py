@@ -8,7 +8,6 @@ encoder output, learned positions, tied embedding head.
 """
 from __future__ import annotations
 
-import math
 from typing import NamedTuple
 
 import jax

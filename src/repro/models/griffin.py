@@ -16,7 +16,6 @@ shape feasible for this arch.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import NamedTuple
 
@@ -25,7 +24,6 @@ import jax.numpy as jnp
 
 from .layers import (apply_rope, attention, chunked_ce_loss, mlp, mlp_params,
                      rms_norm, rope)
-from .transformer import _assign, build_params, table_logical
 
 __all__ = ["griffin_param_table", "griffin_loss", "griffin_prefill",
            "griffin_decode_step", "init_griffin_cache", "GriffinCache"]

@@ -13,14 +13,12 @@ compute-bound cells (see EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
-import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from .layers import chunked_ce_loss, layer_norm
-from .transformer import _assign
 
 __all__ = ["rwkv_param_table", "rwkv_loss", "rwkv_prefill",
            "rwkv_decode_step", "init_rwkv_cache", "RWKVCache"]

@@ -11,7 +11,7 @@ traversed with jax.lax.scan (O(1) HLO size in depth — required to keep the
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

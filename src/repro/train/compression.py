@@ -12,7 +12,6 @@ already reduced by the normal SPMD partitioning over 'data'.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -16,7 +16,6 @@ repartitioning of the program.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

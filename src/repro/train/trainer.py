@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..distributed.sharding import (ACT_RULES, batch_shardings,
+from ..distributed.sharding import (batch_shardings,
                                     logical_to_pspec, make_constrain,
                                     param_shardings, rules_for,
                                     set_active_mesh)

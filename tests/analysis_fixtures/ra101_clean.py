@@ -1,0 +1,16 @@
+"""Must NOT trigger RA101: distinct streams via fold_in / distinct seeds."""
+import jax
+
+
+def sample_a(cfg):
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), 1)
+    return jax.random.normal(key, (3,))
+
+
+def sample_b(cfg):
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), 2)
+    return jax.random.uniform(key, (3,))
+
+
+def sample_c(cfg):
+    return jax.random.normal(jax.random.PRNGKey(cfg.seed + 999), (3,))

@@ -1,0 +1,11 @@
+"""Must trigger RA101: same seed expression builds two identical keys."""
+import jax
+
+
+def sample_a(cfg):
+    return jax.random.normal(jax.random.PRNGKey(cfg.seed + 1), (3,))
+
+
+def sample_b(cfg):
+    # identical key to sample_a -> shared randomness
+    return jax.random.uniform(jax.random.PRNGKey(cfg.seed + 1), (3,))

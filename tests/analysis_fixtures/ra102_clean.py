@@ -1,0 +1,23 @@
+"""Must NOT trigger RA102: branches on static args / None checks only."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block"))
+def dispatch(x, mode, block=64):
+    if mode == "double":     # static argument: fine
+        return x * 2.0
+    if block > 128:          # static argument: fine
+        return x + 1.0
+    return x
+
+
+@jax.jit
+def with_default(x, y=None):
+    if y is None:            # None-check on an optional arg: fine
+        return x
+    if not isinstance(x, jnp.ndarray):   # isinstance guard: fine
+        x = jnp.asarray(x)
+    return x + y

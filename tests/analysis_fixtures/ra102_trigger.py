@@ -1,0 +1,19 @@
+"""Must trigger RA102: Python control flow on a traced argument."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def relu_bad(x):
+    if x > 0:          # traced value in Python `if`
+        return x
+    return jnp.zeros_like(x)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def loop_bad(x, iters):
+    while x < 1.0:     # traced value in Python `while`
+        x = x * 2.0
+    return x

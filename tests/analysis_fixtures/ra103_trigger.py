@@ -1,0 +1,14 @@
+"""Must trigger RA103: host syncs inside Python loops in a jax module."""
+import jax
+import numpy as np
+
+
+def solver_driver(step, x0, iters):
+    x = x0
+    history = []
+    for _ in range(iters):
+        x = step(x)
+        history.append(float(x.mean()))     # sync per iteration
+        arr = np.asarray(x)                 # sync per iteration
+        jax.block_until_ready(x)            # sync per iteration
+    return history, arr

@@ -1,0 +1,10 @@
+"""Must NOT trigger RA104: explicit dtypes and meaningful scalar ops."""
+import jax.numpy as jnp
+
+
+def no_promote(x):
+    a = x * 2.0                       # meaningful scalar: fine
+    b = x + 1.5                       # meaningful scalar: fine
+    c = x.astype(jnp.float32)         # explicit dtype: fine
+    d = jnp.zeros(3, dtype=x.dtype)   # inherited dtype: fine
+    return a, b, c, d

@@ -1,0 +1,10 @@
+"""Must trigger RA104: implicit promotion via identity scalar ops."""
+import jax.numpy as jnp
+
+
+def promote(x):
+    a = x * 1.0            # identity multiply: promotes under x64
+    b = x + 0.0            # identity add
+    c = x.astype(float)    # Python float -> platform default dtype
+    d = jnp.zeros(3, dtype=float)   # dtype=float is platform-dependent
+    return a, b, c, d

@@ -1,0 +1,11 @@
+"""Must NOT trigger RA105: immutable defaults / None sentinels."""
+
+
+def collect(item, acc=None):
+    acc = [] if acc is None else acc
+    acc.append(item)
+    return acc
+
+
+def configure(overrides=(), name="default", count=0):
+    return dict(base=1, name=name, count=count, **dict(overrides))

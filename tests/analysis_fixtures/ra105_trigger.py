@@ -1,0 +1,10 @@
+"""Must trigger RA105: mutable default arguments."""
+
+
+def collect(item, acc=[]):
+    acc.append(item)
+    return acc
+
+
+def configure(overrides={}):
+    return dict(base=1, **overrides)

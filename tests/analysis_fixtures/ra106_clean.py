@@ -1,0 +1,9 @@
+"""Must NOT trigger RA106: allowed deps and relative imports only."""
+import jax.numpy as jnp
+import numpy as np
+
+from . import ra105_clean
+
+
+def norm(x):
+    return float(np.linalg.norm(np.asarray(jnp.asarray(x)))), ra105_clean

@@ -1,0 +1,9 @@
+"""Must trigger RA106: banned scipy / torch imports (module + function)."""
+import scipy.linalg
+import torch
+
+
+def fallback(x):
+    from scipy.stats import spearmanr
+
+    return spearmanr(x, x), scipy.linalg.norm(x), torch.tensor(x)

@@ -92,20 +92,9 @@ def test_norm_ppf_known_quantiles():
         _norm_ppf(1.0)
 
 
-def test_predictor_no_scipy_dependency():
-    """The autotune predictor module must not import scipy."""
-    import ast
-    import inspect
-
-    import repro.autotune.predictor as mod
-
-    tree = ast.parse(inspect.getsource(mod))
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Import):
-            assert not any(a.name.split(".")[0] == "scipy"
-                           for a in node.names)
-        if isinstance(node, ast.ImportFrom):
-            assert (node.module or "").split(".")[0] != "scipy"
+# The one-off no-scipy AST guard that used to live here is now lint rule
+# RA106 in repro.analysis (banning scipy AND torch across all of
+# src/repro); see tests/test_analysis.py::test_src_tree_has_no_banned_imports.
 
 
 # --------------------------------------------------------------------------
