@@ -23,7 +23,17 @@ Fails (exit 1) when
   reduce cost_analysis bytes-accessed by >= 1.5x vs the committed
   two-stage kernel, and the consolidated stacked solve must perform
   strictly fewer operator sweeps (and column MVMs) per MLL/posterior
-  evaluation than the separate-solve path.
+  evaluation than the separate-solve path, or
+* any acceptance claim measured by ``bench_serving`` is false: the
+  state-keyed posterior cache must make warm per-request latency >= 3x
+  lower than cache-bypassed requests, coalesced prediction must sustain
+  >= 2x per-request throughput at 8 concurrent tenants, and a repeated
+  ``posterior()`` on an unchanged state must perform zero additional
+  operator sweeps (verified via ``solve_info`` / solve-count identity).
+
+Like ``--mvm``, the serving section is machine-relative (speedup ratios
+and deterministic cache checks), so it gates without a committed-baseline
+comparison.
 
 The committed baseline was measured on a different machine than the CI
 runner, so raw wall times are not comparable. Timings are therefore
@@ -97,7 +107,7 @@ def _check_acceptance(name: str, payload: dict, base_payload: dict,
 
 def check(baseline: dict, backends: dict | None, automl: dict | None,
           factor: float, curvepred: dict | None = None,
-          mvm: dict | None = None) -> list[str]:
+          mvm: dict | None = None, serving: dict | None = None) -> list[str]:
     failures = []
 
     if backends is not None:
@@ -175,6 +185,33 @@ def check(baseline: dict, backends: dict | None, automl: dict | None,
                   f"sweeps / {s['stacked']['column_matvecs']} col-MVMs vs "
                   f"separate {s['separate']['sweeps']} / "
                   f"{s['separate']['column_matvecs']}")
+
+    if serving is not None:
+        for claim, value in serving["acceptance"].items():
+            if value:
+                print(f"ok        serving acceptance: {claim}")
+            else:
+                failures.append(f"CLAIM FAILED serving acceptance: {claim}")
+        lat = serving.get("latency", {})
+        if lat:
+            print(f"info      serving latency (n={lat['n']} m={lat['m']}): "
+                  f"cold p50 {lat['cold']['p50_ms']}ms vs warm "
+                  f"{lat['warm']['p50_ms']}ms "
+                  f"({lat['warm_speedup_p50']}x)")
+        for name in ("throughput", "throughput_large"):
+            tp = serving.get(name)
+            if tp:
+                print(f"info      serving {name} (n={tp['n']} m={tp['m']}): "
+                      f"per-request {tp['per_request_rps']} req/s vs "
+                      f"coalesced {tp['coalesced_rps']} req/s "
+                      f"({tp['coalesced_speedup']}x)")
+        sc = serving.get("solve_cache", {})
+        if sc:
+            print(f"info      serving solve-cache [{sc['backend']}]: "
+                  f"solves {sc['solve_count_first']}->"
+                  f"{sc['solve_count_second']} tally_delta="
+                  f"{sc['tally_delta']} info_resident="
+                  f"{sc['solve_info_resident']}")
     return failures
 
 
@@ -189,6 +226,8 @@ def main(argv=None) -> int:
                     help="BENCH_curve_pred json to gate (omit to skip)")
     ap.add_argument("--mvm", default=None,
                     help="BENCH_mvm json to gate (omit to skip)")
+    ap.add_argument("--serving", default=None,
+                    help="BENCH_serving json to gate (omit to skip)")
     ap.add_argument("--factor", type=float, default=2.0)
     args = ap.parse_args(argv)
 
@@ -204,12 +243,14 @@ def main(argv=None) -> int:
     automl = load(args.automl)
     curvepred = load(args.curvepred)
     mvm = load(args.mvm)
-    if all(p is None for p in (backends, automl, curvepred, mvm)):
+    serving = load(args.serving)
+    if all(p is None for p in (backends, automl, curvepred, mvm, serving)):
         print("benchmark gate FAILED: no sections given — pass at least "
-              "one of --backends/--automl/--curvepred/--mvm")
+              "one of --backends/--automl/--curvepred/--mvm/--serving")
         return 1
 
-    failures = check(baseline, backends, automl, args.factor, curvepred, mvm)
+    failures = check(baseline, backends, automl, args.factor, curvepred,
+                     mvm, serving)
     if failures:
         print("\n".join(["", "benchmark gate FAILED:"] + failures))
         return 1

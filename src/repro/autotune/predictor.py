@@ -30,7 +30,6 @@ from __future__ import annotations
 import math
 from typing import Callable
 
-import jax
 import numpy as np
 from jax.scipy.special import erfinv
 
@@ -121,9 +120,14 @@ class CurvePredictor:
     def predict_final(self, key=None):
         """(mean, std) of each config's final-epoch metric in score space.
 
-        Default-key calls are cached per refit, so a scheduler reading the
-        same prediction twice (rung scoring, then the run summary) pays for
-        one posterior pass.
+        Default-key calls go through the state-keyed posterior cache
+        (``posterior(state)`` returns the state's shared lazy posterior and
+        ``final()`` reads its cached default-sample stream), so a scheduler
+        reading the same prediction twice — rung scoring, then the run
+        summary — performs zero additional operator sweeps. The numpy
+        conversion is additionally cached per refit. ``extend``/``refit``
+        in :meth:`update` produce fresh state objects, which is what
+        invalidates both layers.
         """
         if self.state is None:
             raise RuntimeError("predict_final before any update()")
@@ -132,7 +136,6 @@ class CurvePredictor:
             if self._final_cache is not None \
                     and self._final_cache[0] == self.n_refits:
                 return self._final_cache[1], self._final_cache[2]
-            key = jax.random.PRNGKey(self.seed + self.n_refits)
         mean, var = posterior(self.state).final(key=key)
         mean = np.asarray(mean)
         std = np.sqrt(np.maximum(np.asarray(var), 0.0))

@@ -29,8 +29,8 @@ from .matheron import (kronecker_correction, prior_residual_draws,
                        sample_posterior_grid)
 from .mvm import (grid_to_packed, joint_cov_packed, kron_dense, lk_mvm,
                   lk_operator, packed_to_grid)
-from .posterior import (BatchedPosterior, Posterior, joint_grams, posterior,
-                        posterior_batch)
+from .posterior import (BatchedPosterior, Posterior, PosteriorLike,
+                        joint_grams, posterior, posterior_batch)
 from .precond import (pivoted_cholesky_grid, pivoted_cholesky_latent,
                       woodbury_preconditioner)
 from .priors import noise_prior_logpdf, x_lengthscale_prior_logpdf
@@ -38,7 +38,7 @@ from .slq import (lanczos, rademacher_probes, slq_logdet,
                   slq_logdet_from_tridiag, tridiag_from_cg)
 from .state import (GPData, LKGPConfig, LKGPParams, LKGPState, extend, fit,
                     fit_batch, gram_matrices, init_params, log_prior, refit,
-                    resolve_backend, unstack)
+                    resolve_backend, stack_states, unstack)
 from .transforms import TTransform, XTransform, YTransform
 
 __all__ = [
@@ -56,14 +56,14 @@ __all__ = [
     "woodbury_preconditioner",
     # state + functional API
     "LKGPState", "GPData", "LKGPConfig", "LKGPParams", "fit", "fit_batch",
-    "extend", "refit", "unstack", "resolve_backend", "gram_matrices",
-    "init_params", "log_prior",
+    "extend", "refit", "unstack", "stack_states", "resolve_backend",
+    "gram_matrices", "init_params", "log_prior",
     # engines
     "InferenceEngine", "ENGINES", "get_engine", "register_engine",
     "list_backends", "DenseEngine", "IterativeEngine", "PallasEngine",
     "DistributedEngine", "CustomMVMEngine", "LatentKroneckerOperator",
     "StackedSolveResult", "make_mll", "make_mll_iterative", "mll_cholesky",
     # posterior + facade
-    "Posterior", "posterior", "joint_grams", "LKGP",
+    "PosteriorLike", "Posterior", "posterior", "joint_grams", "LKGP",
     "BatchedPosterior", "posterior_batch",
 ]

@@ -43,9 +43,27 @@ __all__ = [
     "list_backends", "DenseEngine", "IterativeEngine", "PallasEngine",
     "DistributedEngine", "CustomMVMEngine", "LatentKroneckerOperator",
     "StackedSolveResult", "make_mll", "mll_cholesky", "make_mll_iterative",
+    "solve_tally",
 ]
 
 _LOG_2PI = math.log(2.0 * math.pi)
+
+# Process-wide count of engine solve entries. Eager solves (the posterior
+# hot path) bump it once per call; solves inside a jitted objective bump it
+# once per TRACE, not per execution — so this is a cache-verification aid
+# ("did that posterior() call re-solve?"), not a performance counter. The
+# serving benchmark asserts it stays flat across a warm posterior() re-read.
+_solve_tally = 0
+
+
+def solve_tally() -> int:
+    """Monotonic count of engine solve entries in this process."""
+    return _solve_tally
+
+
+def _bump_tally() -> None:
+    global _solve_tally
+    _solve_tally += 1
 
 
 @runtime_checkable
@@ -161,6 +179,7 @@ class DenseEngine:
 
     def solve(self, A, b, config, x0=None):
         # x0 is accepted for interface uniformity; the exact solve ignores it.
+        _bump_tally()
         if not isinstance(A, _DenseOperator):
             return cg_solve(A, b, tol=config.cg_tol,
                             max_iters=config.cg_max_iters, x0=x0).x
@@ -257,6 +276,7 @@ class IterativeEngine:
     def solve_result(self, A, b, config, x0=None) -> CGResult:
         """Like :meth:`solve` but returning the full per-column diagnostics
         (iterations, true residuals, breakdown flags, MVM counts)."""
+        _bump_tally()
         rank = getattr(config, "precond_rank", 0)
         if rank and isinstance(A, LatentKroneckerOperator):
             res = _precond_solve(A, b, config, rank, x0=x0)
@@ -277,6 +297,7 @@ class IterativeEngine:
         are recorded during the SAME solve and turned into the
         log-determinant estimate — no separate Lanczos sweep.
         """
+        _bump_tally()
         rank = getattr(config, "precond_rank", 0)
         if rank and isinstance(A, LatentKroneckerOperator):
             res = _precond_solve(A, rhs, config, rank, x0=x0)
@@ -433,6 +454,7 @@ class DistributedEngine(IterativeEngine):
         return A
 
     def solve(self, A, b, config, x0=None):
+        _bump_tally()
         from ..distributed.lkgp_dist import dist_cg_solve
 
         def one(bb, x0b=None):

@@ -16,15 +16,25 @@ The model layer proper lives in three sibling modules:
   ``K^{-1} y`` solve shared between the mean and Matheron samples.
 
 This module re-exports all of that and keeps the original mutable
-:class:`LKGP` class as a thin wrapper for existing call sites. New code
-should prefer the functional API::
+:class:`LKGP` class as a thin wrapper for existing call sites. The wrapper
+is DEPRECATED (constructing one warns): it predates the immutable-state
+design, so it cannot participate in the state-keyed posterior cache or the
+serving layer's coalescing, both of which key on :class:`LKGPState`
+identity. Use the functional API::
 
     state = fit(X, t, Y, mask, LKGPConfig(backend="iterative"))
     post = posterior(state)
     mean, var = post.final()
+
+Migration is mechanical — see the README's "Migrating off the LKGP
+facade" section: ``LKGP(cfg).fit(...)`` -> ``fit(..., cfg)``;
+``model.posterior(Xs)`` -> ``posterior(state, Xs)``;
+``model.predict_final()`` -> ``posterior(state).final()``;
+``model.params`` / transforms live on the state.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any
 
 # Re-exports: the historical public surface of this module.
@@ -63,6 +73,12 @@ class LKGP:
     """
 
     def __init__(self, config: LKGPConfig | None = None):
+        warnings.warn(
+            "LKGP is deprecated; use the functional API (fit / posterior "
+            "from repro.core) — see the README migration notes. The facade "
+            "bypasses the state-keyed posterior cache and the serving "
+            "layer's request coalescing.",
+            DeprecationWarning, stacklevel=2)
         self.config = config if config is not None else LKGPConfig()
         self.state: LKGPState | None = None
         self.fit_result: Any = None

@@ -39,7 +39,7 @@ from .transforms import TTransform, XTransform, YTransform
 __all__ = [
     "LKGPParams", "LKGPConfig", "GPData", "LKGPState", "init_params",
     "gram_matrices", "log_prior", "resolve_backend", "fit", "fit_batch",
-    "extend", "refit", "unstack",
+    "extend", "refit", "unstack", "stack_states",
 ]
 
 _LOG_2PI = math.log(2.0 * math.pi)
@@ -83,6 +83,12 @@ class LKGPConfig:
     jitter: float = 1e-6
     lbfgs_iters: int = 100
     posterior_samples: int = 64
+    # Default cache policy for posterior(state): True lets repeated
+    # posterior() calls on an UNCHANGED state share one lazy Posterior (and
+    # therefore its cached K^{-1}[y|residuals] solves). Per-call override:
+    # posterior(state, cache=...). extend/refit return new state objects,
+    # which is what invalidates the cache.
+    posterior_cache: bool = True
     seed: int = 0
     use_pallas: bool = False        # legacy alias for backend="pallas"
 
@@ -131,8 +137,18 @@ class LKGPState:
     transformed view engines consume is exposed via :attr:`data`.
 
     ``fit`` attaches two non-pytree diagnostics with ``object.__setattr__``:
-    ``fit_result`` (the L-BFGS result) and ``backend_used``. They do not
-    survive ``tree_map`` — read them with ``getattr(state, ..., None)``.
+    ``fit_result`` (the L-BFGS result) and ``backend_used``. They describe
+    the *fit call that produced this exact state* and never carry over to
+    derived states: ``extend`` explicitly clears them (the carried-over
+    warm-start parameters are no longer the result of any optimisation of
+    the extended data) and ``refit`` re-derives them from its own fit.
+    They do not survive ``tree_map`` either — read them with
+    ``getattr(state, ..., None)``.
+
+    :func:`repro.core.posterior.posterior` may attach ``_posterior_cache``
+    the same way (the state-keyed solve cache): because every state
+    transition builds a fresh object, a cached posterior can never outlive
+    the state whose solves it holds.
     """
     params: LKGPParams
     X: jnp.ndarray       # (n, d) raw hyper-parameters
@@ -374,6 +390,35 @@ def unstack(state: LKGPState) -> list[LKGPState]:
     return [jax.tree_util.tree_map(lambda a: a[i], state) for i in range(B)]
 
 
+def stack_states(states: list[LKGPState]) -> LKGPState:
+    """Stack same-shaped per-task states into one batched state.
+
+    The inverse of :func:`unstack`: every data leaf (params, data,
+    transforms) gains a leading batch dimension, yielding a state that
+    :func:`~repro.core.posterior.posterior_batch` accepts. This is how the
+    serving layer coalesces posterior requests from independent tenants
+    into ONE vmapped evaluation. All states must share shapes and an
+    identical ``config`` (the pytree treedef carries it as metadata).
+    """
+    if not states:
+        raise ValueError("stack_states needs at least one state")
+    first = states[0]
+    for i, st in enumerate(states):
+        if st.config != first.config:
+            raise ValueError(f"state {i} has a different config than state 0"
+                             " — coalesced states must share one config")
+        if st.X.ndim != 2:
+            raise ValueError(f"state {i} is already batched "
+                             f"(X ndim {st.X.ndim}); stack unbatched states")
+        if (st.X.shape != first.X.shape or st.t.shape != first.t.shape
+                or st.Y.shape != first.Y.shape):
+            raise ValueError(
+                f"state {i} shapes (X {st.X.shape}, t {st.t.shape}, "
+                f"Y {st.Y.shape}) do not match state 0 "
+                f"(X {first.X.shape}, t {first.t.shape}, Y {first.Y.shape})")
+    return jax.tree_util.tree_map(lambda *leaves: jnp.stack(leaves), *states)
+
+
 def extend(state: LKGPState, new_Y, new_mask, new_X=None) -> LKGPState:
     """Incremental conditioning: fold new observations into the state.
 
@@ -412,11 +457,18 @@ def extend(state: LKGPState, new_Y, new_mask, new_X=None) -> LKGPState:
     x_tf, _, y_tf = _fit_transforms(X, state.t, Y, mask)
     out = dataclasses.replace(state, X=X, Y=Y, mask=mask,
                               x_tf=x_tf, y_tf=y_tf)
-    # dataclasses.replace drops the non-pytree diagnostics; carry the bound
-    # engine forward so posterior()/refit() keep using the same backend.
+    # dataclasses.replace drops every attached attribute. The bound engine
+    # is deliberately carried forward (posterior()/refit() keep using the
+    # same backend); fit_result / backend_used are deliberately NOT — they
+    # described the fit of the *pre-extend* data and would be stale against
+    # the extended grid (the carried-over params are a warm start, not an
+    # optimum). Clearing them explicitly pins that contract even if the
+    # construction above ever changes to one that copies attributes.
     eng = getattr(state, "engine", None)
     if eng is not None:
         object.__setattr__(out, "engine", eng)
+    object.__setattr__(out, "fit_result", None)
+    object.__setattr__(out, "backend_used", None)
     return out
 
 

@@ -1,0 +1,29 @@
+"""Multi-tenant streaming prediction service (ROADMAP: serve heavy traffic).
+
+Layered store -> batcher -> service:
+
+* :mod:`~repro.serving.store`   — :class:`SessionStore`, an LRU of warm
+  per-tenant/task :class:`~repro.core.state.LKGPState` sessions;
+* :mod:`~repro.serving.batcher` — cross-tenant request coalescing into
+  stackable groups, plus the Future-based async surface;
+* :mod:`~repro.serving.service` — :class:`PredictionService`: cold fit /
+  stream ``extend`` / warm ``refit`` lifecycle, per-request and coalesced
+  prediction through one vmapped posterior, metrics;
+* :mod:`~repro.serving.metrics` — latency percentiles and counters.
+
+Cache semantics in one line: solves are cached on the state object
+(:mod:`repro.core.posterior`), sessions cache their stacked prediction
+view, and every ``observe`` swaps the state — so invalidation is object
+replacement, never bookkeeping.
+"""
+from .batcher import CoalescingBatcher, coalesce_sessions, stack_signature
+from .metrics import Counter, LatencyRecorder
+from .service import Prediction, PredictionService, ServiceConfig
+from .store import Session, SessionKey, SessionStore
+
+__all__ = [
+    "PredictionService", "ServiceConfig", "Prediction",
+    "SessionStore", "SessionKey", "Session",
+    "CoalescingBatcher", "coalesce_sessions", "stack_signature",
+    "LatencyRecorder", "Counter",
+]

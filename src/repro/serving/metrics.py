@@ -1,0 +1,71 @@
+"""Lightweight, dependency-free service metrics.
+
+A :class:`LatencyRecorder` keeps a bounded window of samples and reports
+percentiles over it; :class:`Counter` is a thread-safe monotonic counter.
+Both expose ``snapshot()`` dicts that the service aggregates into one
+metrics payload — the same shape ``benchmarks/bench_serving.py`` writes to
+``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+
+__all__ = ["LatencyRecorder", "Counter", "percentile"]
+
+
+def percentile(sorted_values: list[float], q: float) -> float:
+    """Linear-interpolated percentile of an already-sorted list."""
+    if not sorted_values:
+        return 0.0
+    if len(sorted_values) == 1:
+        return sorted_values[0]
+    pos = (q / 100.0) * (len(sorted_values) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_values) - 1)
+    frac = pos - lo
+    return sorted_values[lo] * (1.0 - frac) + sorted_values[hi] * frac
+
+
+class Counter:
+    """Thread-safe monotonic counter."""
+
+    def __init__(self) -> None:
+        self._value = 0
+        self._lock = threading.Lock()
+
+    def inc(self, by: int = 1) -> None:
+        with self._lock:
+            self._value += by
+
+    @property
+    def value(self) -> int:
+        return self._value
+
+
+class LatencyRecorder:
+    """Bounded sliding window of latencies (seconds) with percentiles."""
+
+    def __init__(self, window: int = 8192) -> None:
+        self._samples: deque[float] = deque(maxlen=window)
+        self._lock = threading.Lock()
+        self._count = 0
+
+    def record(self, seconds: float) -> None:
+        with self._lock:
+            self._samples.append(seconds)
+            self._count += 1
+
+    def snapshot(self) -> dict:
+        """count plus p50/p99/mean in milliseconds over the window."""
+        with self._lock:
+            values = sorted(self._samples)
+            count = self._count
+        if not values:
+            return {"count": 0, "p50_ms": 0.0, "p99_ms": 0.0, "mean_ms": 0.0}
+        return {
+            "count": count,
+            "p50_ms": 1e3 * percentile(values, 50.0),
+            "p99_ms": 1e3 * percentile(values, 99.0),
+            "mean_ms": 1e3 * sum(values) / len(values),
+        }

@@ -12,10 +12,11 @@ try:
 except ImportError:  # container has no hypothesis wheel; see tests/_hypcompat.py
     from _hypcompat import given, settings, st
 
-from repro.core import (LKGP, LKGPConfig, cg_solve, gram_matrices,
-                        init_params, joint_cov_packed, kron_dense, lk_mvm,
-                        lk_operator, make_mll_iterative, mll_cholesky,
-                        rademacher_probes, slq_logdet)
+from repro.core import (LKGPConfig, cg_solve, fit, gram_matrices,
+                        init_params, joint_cov_packed, joint_grams,
+                        kron_dense, lk_mvm, lk_operator, make_mll_iterative,
+                        mll_cholesky, posterior, rademacher_probes,
+                        slq_logdet)
 from repro.core import gp_kernels as gk
 
 
@@ -141,34 +142,35 @@ def test_matheron_posterior_matches_exact_gp():
     key = jax.random.PRNGKey(9)
     n, m, d = 6, 5, 2
     X, t, Y, mask, params = _random_problem(key, n=n, m=m, d=d)
-    model = LKGP(LKGPConfig(cg_tol=1e-10, cg_max_iters=3000, jitter=1e-8,
-                            lbfgs_iters=0))
+    cfg = LKGPConfig(cg_tol=1e-10, cg_max_iters=3000, jitter=1e-8,
+                     lbfgs_iters=0)
     # Fit with 0 L-BFGS iters: transforms + init params only.
-    model.fit(np.asarray(X), np.asarray(t) + 1.0, np.asarray(Y), np.asarray(mask))
+    state = fit(np.asarray(X), np.asarray(t) + 1.0, np.asarray(Y),
+                np.asarray(mask), cfg)
     Xs = np.asarray(jax.random.uniform(jax.random.PRNGKey(10), (3, d)))
 
-    samples = model.posterior_samples(jax.random.PRNGKey(11), Xs=Xs,
-                                      n_samples=4000)
+    samples = posterior(state, Xs=Xs).samples(jax.random.PRNGKey(11),
+                                              n_samples=4000)
     emp_mean = np.asarray(jnp.mean(samples, 0))
 
     # Closed form on packed observed entries (in transformed space).
-    K1a, K2 = model._grams(Xs)
+    K1a, K2 = joint_grams(state, Xs)
     K1a = np.asarray(K1a)
     K2n = np.asarray(K2)
-    noise = float(jnp.exp(model.params.raw_noise))
+    noise = float(jnp.exp(state.params.raw_noise))
     mask_np = np.asarray(mask)
     idx = np.flatnonzero(mask_np.ravel())
     Ktt = np.kron(K1a[:n, :n], K2n)[np.ix_(idx, idx)] + noise * np.eye(len(idx))
     Kst = np.kron(K1a[:, :n], K2n)[:, idx]
-    y = np.asarray(model._Y * model._mask).ravel()[idx]
+    y = np.asarray(state.y_tf(state.Y) * state.mask).ravel()[idx]
     mean_ref = (Kst @ np.linalg.solve(Ktt, y)).reshape(n + 3, m)
-    mean_ref = np.asarray(model.y_tf.inverse(jnp.asarray(mean_ref)))
+    mean_ref = np.asarray(state.y_tf.inverse(jnp.asarray(mean_ref)))
     np.testing.assert_allclose(emp_mean, mean_ref, atol=0.12)
 
     # Marginal variances at the final column.
     Kss = np.kron(K1a, K2n)
     cov_ref = Kss - Kst @ np.linalg.solve(Ktt, Kst.T)
-    var_ref = np.diag(cov_ref).reshape(n + 3, m) * float(model.y_tf.scale) ** 2
+    var_ref = np.diag(cov_ref).reshape(n + 3, m) * float(state.y_tf.scale) ** 2
     emp_var = np.asarray(jnp.var(samples, 0))
     np.testing.assert_allclose(emp_var, var_ref, rtol=0.25, atol=0.05)
 
@@ -188,10 +190,10 @@ def test_fit_recovers_signal_and_improves_mll():
     mask = np.ones((n, m))
     mask[n // 2:, m // 2:] = 0.0  # half the curves observed halfway
 
-    model = LKGP(LKGPConfig(lbfgs_iters=50, mll_method="cholesky"))
-    model.fit(np.asarray(X), np.asarray(t), np.asarray(Y), mask)
-    assert model.fit_result.n_iters >= 1
-    mean, var = model.predict_final()
+    state = fit(np.asarray(X), np.asarray(t), np.asarray(Y), mask,
+                LKGPConfig(lbfgs_iters=50, mll_method="cholesky"))
+    assert state.fit_result.n_iters >= 1
+    mean, var = posterior(state).final()
     truth = np.asarray(Y[:, -1])
     rmse = float(np.sqrt(np.mean((np.asarray(mean) - truth) ** 2)))
     assert rmse < 0.05, rmse

@@ -9,8 +9,9 @@ import pytest
 
 from repro.core import (LKGP, GPData, LKGPConfig, Posterior, cg_solve, extend,
                         fit, fit_batch, get_engine, gram_matrices, init_params,
-                        list_backends, lk_operator, make_mll, posterior,
-                        rademacher_probes, refit, resolve_backend, unstack)
+                        joint_grams, list_backends, lk_operator, make_mll,
+                        posterior, rademacher_probes, refit, resolve_backend,
+                        unstack)
 from repro.core import mll_cholesky
 from repro.data import sample_task
 
@@ -271,28 +272,28 @@ def test_mll_bwd_cotangent_dtypes_match_primals():
 # lazy Posterior
 # --------------------------------------------------------------------------
 def test_posterior_mean_matches_legacy_inline_computation():
-    """Acceptance: Posterior.mean == the seed repo's LKGP.posterior_mean."""
+    """Acceptance: Posterior.mean == the seed repo's inline posterior mean."""
     task = sample_task(seed=7, n=16, m=20, d=7)
     cfg = LKGPConfig(lbfgs_iters=3)
-    model = LKGP(cfg).fit(task.X, task.t, task.Y, task.mask)
+    state = fit(task.X, task.t, task.Y, task.mask, cfg)
 
     # Legacy inline computation (the seed implementation, verbatim).
-    K1a, K2 = model._grams(None)
-    n = model._X.shape[0]
-    noise = jnp.exp(model.params.raw_noise)
-    A = lk_operator(K1a[:n, :n], K2, model._mask, noise)
-    alpha = cg_solve(A, model._Y * model._mask, tol=cfg.cg_tol,
+    K1a, K2 = joint_grams(state, None)
+    n = state.n
+    noise = jnp.exp(state.params.raw_noise)
+    A = lk_operator(K1a[:n, :n], K2, state.mask, noise)
+    alpha = cg_solve(A, state.y_tf(state.Y) * state.mask, tol=cfg.cg_tol,
                      max_iters=cfg.cg_max_iters).x
-    legacy = model.y_tf.inverse(
+    legacy = state.y_tf.inverse(
         jnp.einsum("aj,jm,mk->ak", K1a[:, :n], alpha, K2))
 
     # Same CG solver, same operator -> bit-identical to the seed path.
-    got = posterior(model.state, engine=get_engine("iterative")).mean
+    got = posterior(state, engine=get_engine("iterative")).mean
     np.testing.assert_allclose(np.asarray(got), np.asarray(legacy),
                                rtol=1e-10, atol=1e-10)
-    # The facade delegates to the auto-resolved engine (dense-exact here);
-    # it must agree with the CG-based legacy value to CG tolerance.
-    np.testing.assert_allclose(np.asarray(model.posterior_mean()),
+    # The default call auto-resolves the engine (dense-exact here); it must
+    # agree with the CG-based legacy value to CG tolerance.
+    np.testing.assert_allclose(np.asarray(posterior(state).mean),
                                np.asarray(legacy), atol=1e-2)
 
 
@@ -331,9 +332,13 @@ def test_posterior_samples_consistent_with_mean():
 
 
 def test_posterior_final_matches_facade_predict_final():
+    """The deprecated facade still works (and warns) while delegating to
+    the functional posterior — the one deliberate LKGP call site left."""
     task = _small_task()
     cfg = LKGPConfig(lbfgs_iters=2)
-    model = LKGP(cfg).fit(task.X, task.t, task.Y, task.mask)
+    with pytest.warns(DeprecationWarning, match="LKGP is deprecated"):
+        model = LKGP(cfg)
+    model.fit(task.X, task.t, task.Y, task.mask)
     m1, v1 = model.predict_final(jax.random.PRNGKey(5))
     m2, v2 = posterior(model.state).final(jax.random.PRNGKey(5))
     np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), rtol=1e-12)
