@@ -24,6 +24,12 @@ Fails (exit 1) when
   two-stage kernel, and the consolidated stacked solve must perform
   strictly fewer operator sweeps (and column MVMs) per MLL/posterior
   evaluation than the separate-solve path, or
+* any acceptance claim measured by the solver-crossover mode of
+  ``bench_scaling`` is false: the SGD solver must complete the largest n
+  without breakdown, the SGD-vs-CG f32 posterior mean must agree to
+  rel-err <= 1e-4, and every (n, solver) crossover cell must be present.
+  Wall times include compile and are machine-relative, so like ``--mvm``
+  the section gates on its acceptance booleans only, or
 * any acceptance claim measured by ``bench_serving`` is false: the
   state-keyed posterior cache must make warm per-request latency >= 3x
   lower than cache-bypassed requests, coalesced prediction must sustain
@@ -107,7 +113,8 @@ def _check_acceptance(name: str, payload: dict, base_payload: dict,
 
 def check(baseline: dict, backends: dict | None, automl: dict | None,
           factor: float, curvepred: dict | None = None,
-          mvm: dict | None = None, serving: dict | None = None) -> list[str]:
+          mvm: dict | None = None, serving: dict | None = None,
+          scaling: dict | None = None) -> list[str]:
     failures = []
 
     if backends is not None:
@@ -212,6 +219,27 @@ def check(baseline: dict, backends: dict | None, automl: dict | None,
                   f"{sc['solve_count_second']} tally_delta="
                   f"{sc['tally_delta']} info_resident="
                   f"{sc['solve_info_resident']}")
+
+    if scaling is not None:
+        for claim, value in scaling["acceptance"].items():
+            if value:
+                print(f"ok        scaling acceptance: {claim}")
+            else:
+                failures.append(f"CLAIM FAILED scaling acceptance: {claim}")
+        for row in scaling.get("results", []):
+            print(f"info      scaling n={row['n']} {row['solver']}: "
+                  f"{row['wall_s']}s, {row['iters']} iters, "
+                  f"rel {row['rel_residual']:.1e}"
+                  + (" BREAKDOWN" if row.get("breakdown") else ""))
+        cx = scaling.get("crossover", {})
+        if cx:
+            print(f"info      scaling crossover: per-n fastest "
+                  f"{cx.get('per_n_fastest')}, sgd beats cg at "
+                  f"n={cx.get('sgd_beats_cg_at_n')}")
+        par = scaling.get("parity", {})
+        if par:
+            print(f"info      scaling parity n={par.get('n')}: posterior "
+                  f"mean rel-err {par.get('posterior_mean_rel_err'):.2e}")
     return failures
 
 
@@ -228,6 +256,8 @@ def main(argv=None) -> int:
                     help="BENCH_mvm json to gate (omit to skip)")
     ap.add_argument("--serving", default=None,
                     help="BENCH_serving json to gate (omit to skip)")
+    ap.add_argument("--scaling", default=None,
+                    help="BENCH_scaling json to gate (omit to skip)")
     ap.add_argument("--factor", type=float, default=2.0)
     args = ap.parse_args(argv)
 
@@ -244,13 +274,16 @@ def main(argv=None) -> int:
     curvepred = load(args.curvepred)
     mvm = load(args.mvm)
     serving = load(args.serving)
-    if all(p is None for p in (backends, automl, curvepred, mvm, serving)):
+    scaling = load(args.scaling)
+    if all(p is None for p in (backends, automl, curvepred, mvm, serving,
+                               scaling)):
         print("benchmark gate FAILED: no sections given — pass at least "
-              "one of --backends/--automl/--curvepred/--mvm/--serving")
+              "one of --backends/--automl/--curvepred/--mvm/--serving/"
+              "--scaling")
         return 1
 
     failures = check(baseline, backends, automl, args.factor, curvepred,
-                     mvm, serving)
+                     mvm, serving, scaling)
     if failures:
         print("\n".join(["", "benchmark gate FAILED:"] + failures))
         return 1

@@ -29,7 +29,8 @@ import numpy as np
 
 __all__ = ["iter_eqns", "find_f64", "find_host_callbacks", "audit_mll",
            "audit_fit_objective", "audit_posterior_final",
-           "audit_fused_mvm", "audit_refit_retrace", "run_all_audits"]
+           "audit_fused_mvm", "audit_solvers", "audit_dist_fused_mvm",
+           "audit_refit_retrace", "run_all_audits"]
 
 _CALLBACK_PRIMS = ("pure_callback", "io_callback", "debug_callback",
                    "callback")
@@ -193,6 +194,88 @@ def audit_fused_mvm() -> list[str]:
     return _audit_jaxpr("lk_mvm_fused", jaxpr)
 
 
+def audit_solvers() -> list[str]:
+    """Every registered solver strategy is f64/callback-free at f32.
+
+    Covers the raw ``sgd_solve`` loop (new in the solver stack — a stray
+    f64 constant in the Polyak averaging or the power-iteration lr estimate
+    would silently double the per-iteration memory traffic) plus each
+    registry strategy's ``solve`` entry point over the latent-Kronecker
+    operator.
+    """
+    from repro.core.mvm import lk_operator
+    from repro.core.solvers import get_solver, list_solvers, sgd_solve
+    from repro.core.state import LKGPConfig
+
+    rng = np.random.default_rng(0)
+    n, m = 8, 6
+    K1 = rng.normal(size=(n, n)).astype(np.float32)
+    K1 = K1 @ K1.T + n * np.eye(n, dtype=np.float32)
+    K2 = rng.normal(size=(m, m)).astype(np.float32)
+    K2 = K2 @ K2.T + m * np.eye(m, dtype=np.float32)
+    mask = (rng.random((n, m)) < 0.8).astype(np.float32)
+    mask[:, 0] = 1.0
+    b = (rng.normal(size=(n, m)) * mask).astype(np.float32)
+
+    A = lk_operator(jnp.asarray(K1), jnp.asarray(K2), jnp.asarray(mask), 0.1)
+    failures = []
+    jaxpr = jax.make_jaxpr(
+        lambda rhs: sgd_solve(A, rhs, tol=1e-4, max_iters=32).x)(b)
+    failures += _audit_jaxpr("sgd_solve", jaxpr)
+    cfg = LKGPConfig(cg_max_iters=32, sgd_iters=32, precond_rank=3)
+    for name in list_solvers():
+        solver = get_solver(name)
+        jaxpr = jax.make_jaxpr(
+            lambda rhs: solver.solve(A, rhs, cfg).x)(b)
+        failures += _audit_jaxpr(f"solver[{name}].solve", jaxpr)
+    return failures
+
+
+def _find_pallas_in_shard_map(jaxpr) -> int:
+    """Count pallas_call equations nested inside shard_map equations."""
+    count = 0
+    for eqn in iter_eqns(jaxpr):
+        if eqn.primitive.name != "shard_map":
+            continue
+        for v in eqn.params.values():
+            for sub in _sub_jaxprs(v):
+                count += sum(1 for e in iter_eqns(sub)
+                             if e.primitive.name == "pallas_call")
+    return count
+
+
+def audit_dist_fused_mvm() -> list[str]:
+    """DistributedEngine's fused operator: f64-free AND fused per shard.
+
+    Asserts the structural claim behind the n-sharded fused path — the
+    traced program contains a ``pallas_call`` *inside* the ``shard_map``
+    equation (each shard runs the fused kernel on its row block), and with
+    f32 grams nothing promotes to f64.
+    """
+    from repro.core.engines import DistributedEngine
+
+    rng = np.random.default_rng(0)
+    n, m = 32, 8
+    K1 = rng.normal(size=(n, n)).astype(np.float32)
+    K1 = (K1 @ K1.T / n + np.eye(n)).astype(np.float32)
+    K2 = rng.normal(size=(m, m)).astype(np.float32)
+    K2 = (K2 @ K2.T / m + np.eye(m)).astype(np.float32)
+    mask = (rng.random((n, m)) < 0.8).astype(np.float32)
+    u = (rng.normal(size=(n, m)) * mask).astype(np.float32)
+
+    engine = DistributedEngine(fused=True)
+    A = engine.operator_from_grams(jnp.asarray(K1), jnp.asarray(K2),
+                                   jnp.asarray(mask), 0.1)
+    jaxpr = jax.make_jaxpr(A)(jnp.asarray(u))
+    failures = _audit_jaxpr("dist_fused_mvm", jaxpr)
+    n_fused = _find_pallas_in_shard_map(jaxpr)
+    if n_fused < 1:
+        failures.append(
+            "dist_fused_mvm: no pallas_call traced inside shard_map — the "
+            "distributed engine is not running the fused kernel per shard")
+    return failures
+
+
 def audit_refit_retrace() -> list[str]:
     """Two same-shape refits reuse one compiled objective (no retrace)."""
     from repro.core import state as state_mod
@@ -225,6 +308,8 @@ def run_all_audits(verbose: bool = False) -> list[str]:
               ("fit objective f64/callback", audit_fit_objective),
               ("Posterior.final f64/callback", audit_posterior_final),
               ("fused MVM f64/callback", audit_fused_mvm),
+              ("solver stack f64/callback", audit_solvers),
+              ("distributed fused MVM", audit_dist_fused_mvm),
               ("refit retrace", audit_refit_retrace)]
     failures: list[str] = []
     for name, fn in audits:

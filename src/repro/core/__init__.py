@@ -11,11 +11,12 @@ Layered as state -> engines -> posterior:
   ``K^{-1} y`` shared between the exact mean and Matheron samples;
 * :mod:`~repro.core.lkgp` — the legacy :class:`LKGP` facade.
 
-Supporting numerics: grid-form CG (:mod:`~repro.core.cg`), stochastic
+Supporting numerics: the pluggable solver stack — grid-form CG/PCG/SGD
+(:mod:`~repro.core.solvers`, with ``LKGPConfig.solver`` selecting the
+strategy; :mod:`~repro.core.cg` remains as a deprecation shim), stochastic
 Lanczos quadrature (:mod:`~repro.core.slq`), the latent-Kronecker MVM
 (:mod:`~repro.core.mvm`), Matheron sampling, transforms, and priors.
 """
-from .cg import CGResult, CGTridiag, cg_solve, cg_solve_tridiag, pcg_solve
 from .engines import (ENGINES, CustomMVMEngine, DenseEngine,
                       DistributedEngine, InferenceEngine, IterativeEngine,
                       LatentKroneckerOperator, PallasEngine,
@@ -36,6 +37,9 @@ from .precond import (pivoted_cholesky_grid, pivoted_cholesky_latent,
 from .priors import noise_prior_logpdf, x_lengthscale_prior_logpdf
 from .slq import (lanczos, rademacher_probes, slq_logdet,
                   slq_logdet_from_tridiag, tridiag_from_cg)
+from .solvers import (SOLVERS, CGResult, CGTridiag, Solver, cg_solve,
+                      cg_solve_tridiag, get_solver, list_solvers, pcg_solve,
+                      register_solver, resolve_solver, sgd_solve)
 from .state import (GPData, LKGPConfig, LKGPParams, LKGPState, extend, fit,
                     fit_batch, gram_matrices, init_params, log_prior, refit,
                     resolve_backend, stack_states, unstack)
@@ -44,6 +48,8 @@ from .transforms import TTransform, XTransform, YTransform
 __all__ = [
     # solvers / numerics
     "CGResult", "CGTridiag", "cg_solve", "cg_solve_tridiag", "pcg_solve",
+    "sgd_solve", "Solver", "SOLVERS", "get_solver", "register_solver",
+    "list_solvers", "resolve_solver",
     "KERNELS_1D", "matern12", "matern32",
     "matern52", "rbf_ard", "LBFGSResult", "lbfgs_minimize",
     "sample_posterior_grid", "prior_residual_draws", "kronecker_correction",

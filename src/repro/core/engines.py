@@ -27,15 +27,16 @@ engines use the custom-VJP quadratic-form gradient trick (Gardner et al.,
 from __future__ import annotations
 
 import math
-from typing import Callable, NamedTuple, Protocol, runtime_checkable
+import threading
+from typing import Callable, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
-from .cg import CGResult, cg_solve, cg_solve_tridiag, pcg_solve
 from .mvm import kron_dense, lk_mvm
 from .precond import pivoted_cholesky_grid, woodbury_preconditioner
-from .slq import slq_logdet, slq_logdet_from_tridiag, tridiag_from_cg
+from .slq import slq_logdet
+from .solvers import CGResult, StackedSolveResult, resolve_solver
 from .state import GPData, LKGPConfig, LKGPParams, gram_matrices
 
 __all__ = [
@@ -53,7 +54,11 @@ _LOG_2PI = math.log(2.0 * math.pi)
 # once per TRACE, not per execution — so this is a cache-verification aid
 # ("did that posterior() call re-solve?"), not a performance counter. The
 # serving benchmark asserts it stays flat across a warm posterior() re-read.
+# Engines are shared singletons and PredictionService solves from multiple
+# tenant threads, so the read-modify-write must be lock-guarded — an
+# unguarded `+= 1` can drop counts across an interpreter switch.
 _solve_tally = 0
+_TALLY_LOCK = threading.Lock()
 
 
 def solve_tally() -> int:
@@ -63,7 +68,8 @@ def solve_tally() -> int:
 
 def _bump_tally() -> None:
     global _solve_tally
-    _solve_tally += 1
+    with _TALLY_LOCK:
+        _solve_tally += 1
 
 
 @runtime_checkable
@@ -181,8 +187,7 @@ class DenseEngine:
         # x0 is accepted for interface uniformity; the exact solve ignores it.
         _bump_tally()
         if not isinstance(A, _DenseOperator):
-            return cg_solve(A, b, tol=config.cg_tol,
-                            max_iters=config.cg_max_iters, x0=x0).x
+            return resolve_solver(config, A).solve(A, b, config, x0=x0).x
         L = A.chol()
         N = A.mask.size
         bb = (b * A.mask).reshape(-1, N)          # (batch, N)
@@ -227,21 +232,6 @@ class LatentKroneckerOperator:
         return self._precond[1]
 
 
-class StackedSolveResult(NamedTuple):
-    """One consolidated multi-RHS solve: solutions + (optional) log-det.
-
-    ``x`` are the stacked solutions; ``logdet`` is the SLQ estimate built
-    from the probe columns' CG-Lanczos tridiagonals (None when it could not
-    be fused, e.g. preconditioned solves — the preconditioned Krylov space
-    is M^{-1}A's, not A's); ``result`` carries the block solver's
-    per-column diagnostics (iterations, residuals, breakdown flags,
-    active-column MVM count).
-    """
-    x: jnp.ndarray
-    logdet: jnp.ndarray | None
-    result: CGResult
-
-
 def _stash_diagnostics(A, res: CGResult) -> None:
     """Best-effort: hang the solve diagnostics on the operator object.
 
@@ -275,14 +265,14 @@ class IterativeEngine:
 
     def solve_result(self, A, b, config, x0=None) -> CGResult:
         """Like :meth:`solve` but returning the full per-column diagnostics
-        (iterations, true residuals, breakdown flags, MVM counts)."""
+        (iterations, true residuals, breakdown flags, MVM counts).
+
+        The solve strategy comes from the registry (``config.solver``:
+        cg / pcg / sgd; "auto" keeps the historic PCG-iff-precond_rank
+        routing) — see :mod:`repro.core.solvers`.
+        """
         _bump_tally()
-        rank = getattr(config, "precond_rank", 0)
-        if rank and isinstance(A, LatentKroneckerOperator):
-            res = _precond_solve(A, b, config, rank, x0=x0)
-        else:
-            res = cg_solve(A, b, tol=config.cg_tol,
-                           max_iters=config.cg_max_iters, x0=x0)
+        res = resolve_solver(config, A).solve(A, b, config, x0=x0)
         _stash_diagnostics(A, res)
         return res
 
@@ -291,64 +281,23 @@ class IterativeEngine:
         """ONE batched operator sweep for a whole stack of right-hand sides.
 
         ``rhs``: (s, n, m) stack (e.g. ``[y | probes | Matheron
-        residuals]``); every CG iteration applies the operator to the full
-        stack at once, converged columns freeze. When the trailing
-        ``probe_cols`` rows are SLQ probes, their CG-Lanczos tridiagonals
-        are recorded during the SAME solve and turned into the
-        log-determinant estimate — no separate Lanczos sweep.
+        residuals]``); every solver iteration applies the operator to the
+        full stack at once, converged columns freeze. When the trailing
+        ``probe_cols`` rows are SLQ probes and the CG solver runs, their
+        CG-Lanczos tridiagonals are recorded during the SAME solve and
+        turned into the log-determinant estimate — no separate Lanczos
+        sweep. PCG/SGD solves report ``logdet=None`` and the caller falls
+        back to the separate SLQ pass.
         """
         _bump_tally()
-        rank = getattr(config, "precond_rank", 0)
-        if rank and isinstance(A, LatentKroneckerOperator):
-            res = _precond_solve(A, rhs, config, rank, x0=x0)
-            _stash_diagnostics(A, res)
-            return StackedSolveResult(x=res.x, logdet=None, result=res)
-        if probe_cols and x0 is not None:
-            # A warm start changes the Krylov starting vectors from the
-            # probes to rhs - A@x0, breaking the CG-Lanczos correspondence
-            # the fused log-det relies on; solve warm but report no logdet
-            # (the caller falls back to the separate SLQ pass).
-            probe_cols = 0
-        if probe_cols:
-            res, tri = cg_solve_tridiag(
-                A, rhs, max_rank=config.slq_iters, tol=config.cg_tol,
-                max_iters=config.cg_max_iters, x0=x0)
-            diag, off = tridiag_from_cg(tri.alphas[-probe_cols:],
-                                        tri.betas[-probe_cols:],
-                                        tri.steps[-probe_cols:])
-            logdet = slq_logdet_from_tridiag(diag, off, subspace_dim)
-        else:
-            res = cg_solve(A, rhs, tol=config.cg_tol,
-                           max_iters=config.cg_max_iters, x0=x0)
-            logdet = None
-        _stash_diagnostics(A, res)
-        return StackedSolveResult(x=res.x, logdet=logdet, result=res)
+        st = resolve_solver(config, A).solve_stacked(
+            A, rhs, config, probe_cols=probe_cols,
+            subspace_dim=subspace_dim, x0=x0)
+        _stash_diagnostics(A, st.result)
+        return st
 
     def logdet(self, A, data, config, probes):
         return slq_logdet(A, probes, config.slq_iters, jnp.sum(data.mask))
-
-
-def _precond_solve(A: LatentKroneckerOperator, b, config, rank: int,
-                   x0=None):
-    """Preconditioned CG through the operator's Kronecker factors.
-
-    Flattens grid-form vectors (..., n, m) onto (..., n*m) packed form,
-    preconditions with the Woodbury-inverted rank-``rank`` pivoted Cholesky
-    of the masked latent covariance, and reshapes the solution back. The
-    whole RHS stack shares one Woodbury apply per iteration. All pure jax,
-    so it works under jit with a traced mask.
-    """
-    n, m = A.mask.shape
-    M_inv = A.preconditioner(rank)
-
-    def A_flat(u):
-        return A(u.reshape(*u.shape[:-1], n, m)).reshape(u.shape)
-
-    x0_flat = None if x0 is None else x0.reshape(*x0.shape[:-2], n * m)
-    res = pcg_solve(A_flat, b.reshape(*b.shape[:-2], n * m), M_inv,
-                    tol=config.cg_tol, max_iters=config.cg_max_iters,
-                    x0=x0_flat)
-    return res._replace(x=res.x.reshape(b.shape))
 
 
 class CustomMVMEngine(IterativeEngine):
@@ -430,18 +379,59 @@ class DistributedEngine(IterativeEngine):
     the default is a 1-axis mesh over all local devices. K1 is built
     replicated here; the fully row-sharded K1 build used at pod scale lives
     in :func:`repro.distributed.lkgp_dist.dist_mll_value`.
+
+    ``fused`` routes each shard's row-block MVM through the fused Pallas
+    kernel (:func:`repro.kernels.lk_mvm.lk_mvm_fused_rows`) instead of the
+    two-stage einsum reference. The kernel accumulates in f32, so
+    ``"auto"`` only takes it for f32 operands with a block size that passes
+    the per-shard VMEM budget check; f64 operands (e.g. the x64 parity
+    tests) keep the exact reference body. ``True`` forces it (raising if no
+    block configuration fits VMEM), ``False`` disables it.
+
+    Solves route through the solver registry like every iterative engine
+    (``config.solver``); the global reductions CG/SGD perform are plain
+    ``jnp.sum`` over the sharded rows, which XLA lowers to psums.
     """
 
-    def __init__(self, mesh=None):
+    def __init__(self, mesh=None, fused="auto"):
         if mesh is None:
             import numpy as np
             from jax.sharding import Mesh
             mesh = Mesh(np.array(jax.devices()), ("data",))
         self.mesh = mesh
+        self.fused = fused
+
+    def _fused_blocks(self, K1, K2, mask):
+        """Per-shard (block_n, block_m) for the fused kernel, or None."""
+        if self.fused is False:
+            return None
+        K1 = jnp.asarray(K1)
+        if K1.dtype != jnp.float32:
+            if self.fused is True:
+                raise ValueError(
+                    "DistributedEngine(fused=True) needs float32 operands: "
+                    f"the fused Pallas kernel accumulates in f32, got "
+                    f"{K1.dtype}")
+            return None
+        from ..analysis.vmem import best_fitting_blocks
+        n_local = max(K1.shape[0] // self.mesh.shape["data"], 1)
+        m = jnp.asarray(K2).shape[0]
+        blocks = best_fitting_blocks(n_local, m, precision="f32",
+                                     out_itemsize=K1.dtype.itemsize)
+        if blocks is None and self.fused is True:
+            raise ValueError(
+                "DistributedEngine(fused=True): no fused block size fits "
+                f"the per-shard VMEM budget for n_local={n_local}, m={m}")
+        return blocks
 
     def operator_from_grams(self, K1, K2, mask, noise):
-        from ..distributed.lkgp_dist import dist_lk_operator
-        base = dist_lk_operator(self.mesh, K1, K2, mask, noise)
+        from ..distributed.lkgp_dist import dist_lk_mvm_fused, dist_lk_operator
+        blocks = self._fused_blocks(K1, K2, mask)
+        if blocks is not None:
+            base = dist_lk_mvm_fused(self.mesh, K1, K2, mask, noise,
+                                     block_n=blocks[0], block_m=blocks[1])
+        else:
+            base = dist_lk_operator(self.mesh, K1, K2, mask, noise)
 
         def A(u):
             # The shard_map body is rank-2; map leading batch dims (CG rhs
@@ -451,25 +441,9 @@ class DistributedEngine(IterativeEngine):
             flat = u.reshape((-1, *u.shape[-2:]))
             return jax.lax.map(base, flat).reshape(u.shape)
 
+        # Introspection hook: tests and audits assert which body was traced.
+        setattr(A, "fused", blocks is not None)
         return A
-
-    def solve(self, A, b, config, x0=None):
-        _bump_tally()
-        from ..distributed.lkgp_dist import dist_cg_solve
-
-        def one(bb, x0b=None):
-            x, _, _ = dist_cg_solve(A, bb, tol=config.cg_tol,
-                                    max_iters=config.cg_max_iters, x0=x0b)
-            return x
-
-        if b.ndim == 2:
-            return one(b, x0)
-        # Per-system solves keep CG trip counts independent across the batch.
-        flat = b.reshape((-1, *b.shape[-2:]))
-        if x0 is None:
-            return jax.lax.map(one, flat).reshape(b.shape)
-        x0f = jnp.broadcast_to(x0, b.shape).reshape(flat.shape)
-        return jax.lax.map(lambda args: one(*args), (flat, x0f)).reshape(b.shape)
 
 
 # --------------------------------------------------------------------------

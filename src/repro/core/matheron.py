@@ -27,8 +27,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from .cg import cg_solve
 from .mvm import lk_operator
+from .solvers import get_solver
 
 __all__ = ["sample_posterior_grid", "prior_residual_draws",
            "kronecker_correction"]
@@ -71,7 +71,9 @@ def sample_posterior_grid(key, K1_joint: jnp.ndarray, K2: jnp.ndarray,
                           cg_max_iters: int = 10_000, jitter: float = 1e-6,
                           mvm: Callable | None = None,
                           solve: Callable | None = None,
-                          alpha: jnp.ndarray | None = None) -> jnp.ndarray:
+                          alpha: jnp.ndarray | None = None,
+                          solver: str | None = None,
+                          config=None) -> jnp.ndarray:
     """Draw posterior samples over the full (train + test configs) x t grid.
 
     K1_joint: ((n+n*), (n+n*)) config kernel over [X_train; X_test].
@@ -79,7 +81,13 @@ def sample_posterior_grid(key, K1_joint: jnp.ndarray, K2: jnp.ndarray,
     Y, mask: (n, m) observed learning curves (grid form).
     mvm: optional raw MVM ``mvm(K1, K2, mask, u, noise=...)`` for the CG
       operator; solve: optional batched solver ``solve(rhs) -> K^{-1} rhs``
-      overriding CG entirely; alpha: optional cached ``K^{-1}(Y * mask)``.
+      overriding the solver entirely; alpha: optional cached
+      ``K^{-1}(Y * mask)``; solver: registry name (``"cg"``/``"sgd"``/...)
+      for the pathwise residual solves — SGD is the arXiv 2506.06895
+      pathwise-conditioning regime, where every sample draw is an SGD solve
+      against the same operator; config: optional LKGPConfig supplying the
+      solver hyper-parameters (tolerances default to ``cg_tol`` /
+      ``cg_max_iters`` otherwise).
     Returns samples of shape (n_samples, n+n*, m); rows [:n] are posterior
     curves for the training configs (continuations), rows [n:] for test.
     """
@@ -92,8 +100,17 @@ def sample_posterior_grid(key, K1_joint: jnp.ndarray, K2: jnp.ndarray,
             A = lk_operator(K1_tt, K2, mask, noise)
         else:
             A = lambda u: mvm(K1_tt, K2, mask, u, noise=noise)
-        solve = lambda rhs: cg_solve(A, rhs, tol=cg_tol,
-                                     max_iters=cg_max_iters).x
+        if config is None:
+            # Duck-config carrying just what the solver strategies read.
+            from .state import LKGPConfig
+            config = LKGPConfig(cg_tol=cg_tol, cg_max_iters=cg_max_iters,
+                                solver=solver or "auto")
+        elif solver is not None and getattr(config, "solver", None) != solver:
+            import dataclasses
+            config = dataclasses.replace(config, solver=solver)
+        strategy = get_solver(config.solver if config.solver != "auto"
+                              else "cg")
+        solve = lambda rhs: strategy.solve(A, rhs, config).x
 
     if alpha is None:
         u = solve(mask * (Y[None] - F[:, :n_train, :] - eps))  # (s, n, m)

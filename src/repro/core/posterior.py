@@ -161,7 +161,7 @@ class Posterior:
 
     @property
     def solve_info(self):
-        """Diagnostics (:class:`repro.core.cg.CGResult`) of the most recent
+        """Diagnostics (:class:`repro.core.solvers.CGResult`) of the most recent
         solve through this posterior — per-column iterations, true
         residuals, and breakdown flags — or None before any solve (or for
         engines that do not report them, e.g. the exact dense solve)."""

@@ -1,0 +1,219 @@
+"""Solver protocol + registry: pluggable linear solvers for the engines.
+
+Engines (``repro.core.engines``) realise the projected latent-Kronecker
+operator; *solvers* decide how ``A x = b`` is driven against it. This module
+defines the :class:`Solver` protocol (``solve`` / ``solve_stacked`` with
+CG-compatible diagnostics), a name registry mirroring the engine registry,
+and the three built-in implementations:
+
+* ``cg``  — batched block CG (the paper's App. B solver), with the fused
+            CG-Lanczos/SLQ log-det path on stacked probe solves.
+* ``pcg`` — pivoted-Cholesky preconditioned CG on packed vectors; requires
+            an operator exposing ``.mask`` and ``.preconditioner(rank)``
+            (``LatentKroneckerOperator`` does) and falls back to plain CG
+            otherwise.
+* ``sgd`` — heavy-ball stochastic-gradient solves with Polyak averaging
+            (arXiv 2506.06895's large-n regime).
+
+``LKGPConfig.solver`` selects by name; ``"auto"`` keeps the historical
+behaviour (PCG iff ``precond_rank > 0`` and the operator supports it, else
+CG). Register custom solvers with :func:`register_solver`.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+
+from ..slq import slq_logdet_from_tridiag, tridiag_from_cg
+from .cg import CGResult, cg_solve, cg_solve_tridiag
+from .pcg import pcg_solve
+from .sgd import sgd_solve
+
+__all__ = [
+    "Solver", "SOLVERS", "register_solver", "get_solver", "list_solvers",
+    "resolve_solver", "StackedSolveResult", "CGSolver", "PCGSolver",
+    "SGDSolver",
+]
+
+# Rank used when solver="pcg" is requested explicitly but the config left
+# precond_rank at 0 (the "auto" route only picks pcg when rank > 0).
+_DEFAULT_PCG_RANK = 15
+
+
+class StackedSolveResult(NamedTuple):
+    """One consolidated multi-RHS solve: solutions + (optional) log-det.
+
+    ``x`` are the stacked solutions; ``logdet`` is the SLQ estimate built
+    from the probe columns' CG-Lanczos tridiagonals (None when it could not
+    be fused: preconditioned solves iterate in M^{-1}A's Krylov space, not
+    A's, and SGD solves have no Lanczos correspondence at all — callers
+    fall back to a separate SLQ pass); ``result`` carries the block
+    solver's per-column diagnostics (iterations, residuals, breakdown
+    flags, active-column MVM count).
+    """
+    x: jnp.ndarray
+    logdet: jnp.ndarray | None
+    result: CGResult
+
+
+@runtime_checkable
+class Solver(Protocol):
+    """Linear-solver strategy driven against an engine operator."""
+
+    name: str
+
+    def solve(self, A: Callable, b: jnp.ndarray, config: Any,
+              x0: jnp.ndarray | None = None) -> CGResult:
+        """Solve A x = b for a (stack of) grid-form RHS with diagnostics."""
+        ...
+
+    def solve_stacked(self, A: Callable, rhs: jnp.ndarray, config: Any, *,
+                      probe_cols: int = 0, subspace_dim: Any = None,
+                      x0: jnp.ndarray | None = None) -> StackedSolveResult:
+        """One batched sweep over a whole RHS stack, optionally fusing the
+        SLQ log-det from the trailing ``probe_cols`` probe systems."""
+        ...
+
+
+SOLVERS: dict[str, type] = {}
+
+
+def register_solver(name: str) -> Callable[[type], type]:
+    def deco(cls: type) -> type:
+        cls.name = name
+        SOLVERS[name] = cls
+        return cls
+    return deco
+
+
+_SOLVER_SINGLETONS: dict[str, "Solver"] = {}
+
+
+def get_solver(name: str) -> "Solver":
+    """Solver by registry name; solvers are stateless singletons."""
+    try:
+        cls = SOLVERS[name]
+    except KeyError:
+        raise ValueError(f"unknown solver {name!r}; "
+                         f"available: {sorted(SOLVERS)}") from None
+    solver = _SOLVER_SINGLETONS.get(name)
+    if solver is None:
+        solver = _SOLVER_SINGLETONS[name] = cls()
+    return solver
+
+
+def list_solvers() -> list[str]:
+    return sorted(SOLVERS)
+
+
+def _preconditionable(A: Any) -> bool:
+    return hasattr(A, "preconditioner") and hasattr(A, "mask")
+
+
+def resolve_solver(config: Any, A: Any = None) -> "Solver":
+    """Map ``config.solver`` (default ``"auto"``) to a registered solver.
+
+    ``"auto"`` preserves the pre-registry routing: preconditioned CG iff
+    ``precond_rank > 0`` and the operator carries Kronecker factors to
+    factorise (``A is None`` counts as "supports it" for operator-free
+    contexts), plain CG otherwise.
+    """
+    name = getattr(config, "solver", "auto") or "auto"
+    if name == "auto":
+        rank = getattr(config, "precond_rank", 0)
+        ok = A is None or _preconditionable(A)
+        name = "pcg" if (rank and ok) else "cg"
+    return get_solver(name)
+
+
+@register_solver("cg")
+class CGSolver:
+    """Batched block CG; stacked solves fuse the SLQ log-det via CG-Lanczos."""
+
+    def solve(self, A: Callable, b: jnp.ndarray, config: Any,
+              x0: jnp.ndarray | None = None) -> CGResult:
+        return cg_solve(A, b, tol=config.cg_tol,
+                        max_iters=config.cg_max_iters, x0=x0)
+
+    def solve_stacked(self, A: Callable, rhs: jnp.ndarray, config: Any, *,
+                      probe_cols: int = 0, subspace_dim: Any = None,
+                      x0: jnp.ndarray | None = None) -> StackedSolveResult:
+        if probe_cols and x0 is not None:
+            # A warm start changes the Krylov starting vectors from the
+            # probes to rhs - A@x0, breaking the CG-Lanczos correspondence
+            # the fused log-det relies on; solve warm but report no logdet
+            # (the caller falls back to the separate SLQ pass).
+            probe_cols = 0
+        if probe_cols:
+            res, tri = cg_solve_tridiag(
+                A, rhs, max_rank=config.slq_iters, tol=config.cg_tol,
+                max_iters=config.cg_max_iters, x0=x0)
+            diag, off = tridiag_from_cg(tri.alphas[-probe_cols:],
+                                        tri.betas[-probe_cols:],
+                                        tri.steps[-probe_cols:])
+            logdet = slq_logdet_from_tridiag(diag, off, subspace_dim)
+        else:
+            res = cg_solve(A, rhs, tol=config.cg_tol,
+                           max_iters=config.cg_max_iters, x0=x0)
+            logdet = None
+        return StackedSolveResult(x=res.x, logdet=logdet, result=res)
+
+
+@register_solver("pcg")
+class PCGSolver:
+    """Pivoted-Cholesky preconditioned CG through the operator's factors.
+
+    Flattens grid-form vectors (..., n, m) onto (..., n*m) packed form,
+    preconditions with the Woodbury-inverted rank-r pivoted Cholesky of the
+    masked latent covariance (built and cached by the operator), and
+    reshapes the solution back. The whole RHS stack shares one Woodbury
+    apply per iteration. All pure jax, so it works under jit with a traced
+    mask. Operators without ``.preconditioner`` (bare closures, distributed
+    bodies) fall back to plain CG.
+    """
+
+    def solve(self, A: Callable, b: jnp.ndarray, config: Any,
+              x0: jnp.ndarray | None = None) -> CGResult:
+        if not _preconditionable(A):
+            return get_solver("cg").solve(A, b, config, x0=x0)
+        rank = getattr(config, "precond_rank", 0) or _DEFAULT_PCG_RANK
+        n, m = A.mask.shape
+        M_inv = A.preconditioner(rank)
+
+        def A_flat(u: jnp.ndarray) -> jnp.ndarray:
+            return A(u.reshape(*u.shape[:-1], n, m)).reshape(u.shape)
+
+        x0_flat = None if x0 is None else x0.reshape(*x0.shape[:-2], n * m)
+        res = pcg_solve(A_flat, b.reshape(*b.shape[:-2], n * m), M_inv,
+                        tol=config.cg_tol, max_iters=config.cg_max_iters,
+                        x0=x0_flat)
+        return res._replace(x=res.x.reshape(b.shape))
+
+    def solve_stacked(self, A: Callable, rhs: jnp.ndarray, config: Any, *,
+                      probe_cols: int = 0, subspace_dim: Any = None,
+                      x0: jnp.ndarray | None = None) -> StackedSolveResult:
+        # The preconditioned Krylov space is M^{-1}A's, not A's, so the
+        # CG-Lanczos log-det cannot be fused; callers run SLQ separately.
+        res = self.solve(A, rhs, config, x0=x0)
+        return StackedSolveResult(x=res.x, logdet=None, result=res)
+
+
+@register_solver("sgd")
+class SGDSolver:
+    """Heavy-ball SGD solves with Polyak tail averaging (large-n regime)."""
+
+    def solve(self, A: Callable, b: jnp.ndarray, config: Any,
+              x0: jnp.ndarray | None = None) -> CGResult:
+        return sgd_solve(
+            A, b, tol=config.cg_tol,
+            max_iters=getattr(config, "sgd_iters", 500), x0=x0,
+            momentum=getattr(config, "sgd_momentum", 0.9),
+            lr=getattr(config, "sgd_lr", 0.0))
+
+    def solve_stacked(self, A: Callable, rhs: jnp.ndarray, config: Any, *,
+                      probe_cols: int = 0, subspace_dim: Any = None,
+                      x0: jnp.ndarray | None = None) -> StackedSolveResult:
+        # SGD iterates have no Lanczos correspondence; no fused log-det.
+        res = self.solve(A, rhs, config, x0=x0)
+        return StackedSolveResult(x=res.x, logdet=None, result=res)

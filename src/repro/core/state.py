@@ -73,6 +73,13 @@ class LKGPConfig:
     cg_tol: float = 0.01            # paper App. B
     cg_max_iters: int = 10_000      # paper App. B
     precond_rank: int = 0           # >0: rank-r pivoted-Cholesky PCG (iterative/pallas)
+    # Linear-solver strategy for the iterative-family engines (see
+    # repro.core.solvers): "cg" | "pcg" | "sgd". "auto" keeps the historic
+    # routing — PCG iff precond_rank > 0, plain CG otherwise.
+    solver: str = "auto"
+    sgd_iters: int = 500            # SGD sweep budget (one MVM per sweep)
+    sgd_momentum: float = 0.9       # heavy-ball momentum
+    sgd_lr: float = 0.0             # 0.0: auto 1/lambda_max via power iteration
     slq_probes: int = 16
     slq_iters: int = 25
     # True: the MLL's log-det comes from the probe columns' CG-Lanczos
@@ -231,7 +238,8 @@ _VG_CACHE_MAX = 64
 
 def _objective_cache_key(cfg: LKGPConfig) -> tuple:
     return (cfg.t_kernel, cfg.backend, cfg.mll_method, cfg.auto_cholesky_max,
-            cfg.cg_tol, cfg.cg_max_iters, cfg.precond_rank, cfg.slq_probes,
+            cfg.cg_tol, cfg.cg_max_iters, cfg.precond_rank, cfg.solver,
+            cfg.sgd_iters, cfg.sgd_momentum, cfg.sgd_lr, cfg.slq_probes,
             cfg.slq_iters, cfg.slq_via_cg, cfg.jitter, cfg.use_pallas)
 
 

@@ -26,7 +26,8 @@ from ..compat import shard_map
 
 from ..core.gp_kernels import KERNELS_1D, rbf_ard
 
-__all__ = ["dist_lk_operator", "dist_cg_solve", "dist_mll_value"]
+__all__ = ["dist_lk_operator", "dist_lk_mvm_fused", "dist_cg_solve",
+           "dist_mll_value"]
 
 
 def _row_sharded(mesh, *trailing):
@@ -45,6 +46,47 @@ def dist_lk_operator(mesh: Mesh, K1_rows, K2, mask, noise):
         t_full = jax.lax.all_gather(t_loc, "data", axis=0, tiled=True)
         s_loc = k1r @ t_full                          # (n/p, m)
         return msk * s_loc + noise * (msk * u)
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("data", None), P(None, None), P("data", None),
+                  P("data", None)),
+        out_specs=P("data", None),
+        check_vma=False,
+    )
+    return functools.partial(fn, K1_rows, K2, mask)
+
+
+def dist_lk_mvm_fused(mesh: Mesh, K1_rows, K2, mask, noise, *,
+                      block_n: int = 128, block_m: int = 128,
+                      precision: str = "f32",
+                      interpret: bool | None = None):
+    """Distributed operator u -> A(u) running the FUSED Pallas kernel per shard.
+
+    Same sharding contract as :func:`dist_lk_operator` (K1_rows / mask / u
+    row-sharded P('data', None), K2 replicated), but each shard's row-block
+    MVM is one :func:`repro.kernels.lk_mvm.lk_mvm_fused_rows` pallas_call
+    instead of the two-stage einsum reference: the (n/p, m) stage-R
+    intermediate lives only in VMEM. Communication is unchanged — one
+    all-gather of the pre-masked (n, m) input per MVM; the gathered operand
+    feeds the kernel's global k sweep while the local mask/u rows feed its
+    epilogue.
+
+    The kernel accumulates in f32 (or bf16-compute with ``precision=
+    "bf16"``), so callers wanting f64-exact semantics (e.g. x64 parity
+    tests) should use :func:`dist_lk_operator`. Block sizes should come
+    from :func:`repro.analysis.vmem.best_fitting_blocks` evaluated at the
+    PER-SHARD shape (n/p, m) — :class:`repro.core.engines.DistributedEngine`
+    does exactly that.
+    """
+    from ..kernels.lk_mvm import lk_mvm_fused_rows
+
+    def body(k1r, k2, msk, u):
+        um_loc = msk * u                              # (n/p, m)
+        um_full = jax.lax.all_gather(um_loc, "data", axis=0, tiled=True)
+        return lk_mvm_fused_rows(k1r, k2, msk, u, um_full, noise,
+                                 block_n=block_n, block_m=block_m,
+                                 precision=precision, interpret=interpret)
 
     fn = shard_map(
         body, mesh=mesh,

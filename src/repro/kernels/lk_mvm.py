@@ -47,7 +47,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from ..analysis.vmem import check_fused_blocks
 
-__all__ = ["lk_mvm_pallas", "lk_mvm_fused", "lk_mvm_two_stage"]
+__all__ = ["lk_mvm_pallas", "lk_mvm_fused", "lk_mvm_fused_rows",
+           "lk_mvm_two_stage"]
 
 
 def _stage_right_kernel(u_ref, mask_ref, k2_ref, o_ref, acc_ref, *, nk: int):
@@ -271,6 +272,121 @@ def lk_mvm_fused(K1: jnp.ndarray, K2: jnp.ndarray, mask: jnp.ndarray,
     )(K1p, up, maskp, K2p, noise_arr)
 
     return out[:, :n, :m].reshape(*batch_shape, n, m)
+
+
+def _fused_rows_kernel(k1_ref, um_ref, k2_ref, mask_ref, u_ref, noise_ref,
+                       o_ref, acc_ref, *, nk: int, compute_dtype):
+    """Rectangular fused pass for one row shard:
+    out[i, j] = mask_rows * (sum_k K1_rows[i, k] @ (um_full[k, :] @ K2[:, j]))
+    + noise * mask_rows * u_rows.
+
+    Unlike :func:`_fused_kernel`, the epilogue mask/u tiles are dedicated
+    inputs indexed at the *local* output block (i, j): under row sharding
+    the square kernel's ``k == i`` capture trick is invalid, because the
+    k sweep runs over GLOBAL block rows while i indexes the shard's local
+    rows — the strips never align except on shard 0.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Stage-R tile for global block-row k (um_full is pre-masked by the
+    # caller: mask*u gathered across shards), straight into VMEM.
+    t = jax.lax.dot(um_ref[...].astype(compute_dtype),
+                    k2_ref[...].astype(compute_dtype),
+                    preferred_element_type=jnp.float32)
+    acc_ref[...] += jax.lax.dot(k1_ref[...].astype(compute_dtype),
+                                t.astype(compute_dtype),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        msk = mask_ref[...].astype(jnp.float32)
+        noise = noise_ref[0, 0]
+        out = msk * acc_ref[...] + noise * (msk * u_ref[...].astype(jnp.float32))
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m",
+                                             "precision", "interpret"))
+def lk_mvm_fused_rows(K1_rows: jnp.ndarray, K2: jnp.ndarray,
+                      mask_rows: jnp.ndarray, u_rows: jnp.ndarray,
+                      um_full: jnp.ndarray, noise=0.0, *, block_n: int = 128,
+                      block_m: int = 128, precision: str = "f32",
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Fused masked Kronecker MVM for ONE row shard of the latent grid.
+
+    This is the per-shard body of the distributed fused path (see
+    :func:`repro.distributed.lkgp_dist.dist_lk_mvm_fused`): the caller
+    all-gathers ``um_full = mask * u`` (n, m) once per MVM and every shard
+    runs this kernel on its local row block.
+
+    K1_rows: (n_local, n) local row block of K1; mask_rows / u_rows:
+    (n_local, m) local rows of mask / u; um_full: (n, m) gathered masked
+    input. Returns (n_local, m) =
+    ``mask_rows * (K1_rows @ (um_full @ K2)) + noise * (mask_rows * u_rows)``.
+
+    Rank-2 only (the shard_map body is rank-2; engines lax.map the batch).
+    Zero-padding to block multiples is harmless for the same reason as in
+    :func:`lk_mvm_fused`.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if precision not in ("f32", "bf16"):
+        raise ValueError(f"precision must be 'f32' or 'bf16', got {precision!r}")
+    compute_dtype = jnp.bfloat16 if precision == "bf16" else jnp.float32
+    n_local, m = mask_rows.shape
+    n = um_full.shape[0]
+    dtype = u_rows.dtype
+
+    min_edge = 16 if precision == "bf16" else 8
+    bn = min(block_n, max(min_edge, n_local))
+    bm = min(block_m, max(min_edge, m))
+    # Per-shard VMEM guard. The square kernel's byte model upper-bounds this
+    # variant: it charges two (bn, mpad) row strips + 3 scratch tiles where
+    # this kernel holds one (bn, mpad) strip, two (bn, bm) epilogue tiles
+    # and 1 scratch tile.
+    check_fused_blocks(n_local, m, block_n, block_m, precision,
+                       out_itemsize=jnp.dtype(dtype).itemsize)
+    if precision == "bf16":
+        K1_rows = K1_rows.astype(jnp.bfloat16)
+        K2 = K2.astype(jnp.bfloat16)
+        um_full = um_full.astype(jnp.bfloat16)
+        mask_rows = mask_rows.astype(jnp.bfloat16)   # exact: mask is 0/1
+        u_rows = u_rows.astype(jnp.bfloat16)
+    K1p = _pad_to(K1_rows, (bn, bn))
+    K2p = _pad_to(K2, (bm, bm))
+    maskp = _pad_to(mask_rows, (bn, bm))
+    urp = _pad_to(u_rows, (bn, bm))
+    ump = _pad_to(um_full, (bn, bm))
+    nlpad, mpad = maskp.shape
+    # K1 cols and um_full rows are both n padded to the same bn multiple.
+    npad = ump.shape[0]
+    noise_arr = jnp.asarray(noise, jnp.float32).reshape(1, 1)
+
+    gi, gj, gk = nlpad // bn, mpad // bm, npad // bn
+
+    out = pl.pallas_call(
+        functools.partial(_fused_rows_kernel, nk=gk,
+                          compute_dtype=compute_dtype),
+        grid=(gi, gj, gk),
+        in_specs=[
+            pl.BlockSpec((bn, bn), lambda i, j, k: (i, k)),      # K1 rows
+            pl.BlockSpec((bn, mpad), lambda i, j, k: (k, 0)),    # um row strip
+            pl.BlockSpec((mpad, bm), lambda i, j, k: (0, j)),    # K2 col strip
+            pl.BlockSpec((bn, bm), lambda i, j, k: (i, j)),      # local mask
+            pl.BlockSpec((bn, bm), lambda i, j, k: (i, j)),      # local u
+            pl.BlockSpec(memory_space=pltpu.SMEM),               # noise
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nlpad, mpad), dtype),
+        scratch_shapes=[pltpu.VMEM((bn, bm), jnp.float32)],
+        interpret=interpret,
+    )(K1p, ump, K2p, maskp, urp, noise_arr)
+
+    return out[:n_local, :m]
 
 
 def lk_mvm_pallas(K1, K2, mask, u, noise=0.0, *, block_n: int = 128,

@@ -262,7 +262,7 @@ def test_pivoted_cholesky_preconditioner_cuts_cg_iterations():
     """Beyond-paper: rank-r pivoted-Cholesky preconditioner (core.precond)
     solves the same system in far fewer CG iterations on an ill-conditioned
     latent-Kronecker problem, with matching solutions."""
-    from repro.core.cg import pcg_solve
+    from repro.core.solvers import pcg_solve
     from repro.core.mvm import grid_to_packed, packed_to_grid
     from repro.core.precond import (pivoted_cholesky_latent,
                                     woodbury_preconditioner)

@@ -262,3 +262,32 @@ def test_metrics_shape():
     assert m["counters"]["observes"] == 2
     assert m["predict_latency"]["count"] == 1
     assert m["store"]["size"] == 2
+
+
+def test_solve_tally_is_thread_safe():
+    """The engine solve tally is bumped from every tenant thread of a
+    PredictionService; an unguarded read-modify-write drops counts across
+    interpreter switches. Hammer _bump_tally from many threads with an
+    aggressive switch interval and require an EXACT count."""
+    import sys
+
+    from repro.core import engines
+
+    n_threads, n_bumps = 8, 2000
+    before = engines.solve_tally()
+    old_interval = sys.getswitchinterval()
+    sys.setswitchinterval(1e-5)
+    try:
+        def hammer():
+            for _ in range(n_bumps):
+                engines._bump_tally()
+
+        threads = [threading.Thread(target=hammer)
+                   for _ in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+    finally:
+        sys.setswitchinterval(old_interval)
+    assert engines.solve_tally() - before == n_threads * n_bumps

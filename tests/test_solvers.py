@@ -1,0 +1,224 @@
+"""Solver stack: registry, SGD solves, auto-resolution, engine routing,
+and the ``repro.core.cg`` deprecation shim."""
+import importlib
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (LKGPConfig, cg_solve, get_engine, get_solver,
+                        gram_matrices, init_params, list_solvers,
+                        lk_operator, register_solver, resolve_solver,
+                        sgd_solve)
+from repro.core.solvers import (SOLVERS, CGSolver, PCGSolver, SGDSolver,
+                                Solver, StackedSolveResult, estimate_lmax)
+
+
+def _lk_problem(n=12, m=10, d=3, seed=0, noise=0.05):
+    key = jax.random.PRNGKey(seed)
+    kx, ky, kl = jax.random.split(key, 3)
+    X = jax.random.uniform(kx, (n, d), jnp.float64)
+    t = jnp.linspace(0.05, 1.0, m).astype(jnp.float64)
+    K1, K2 = gram_matrices(init_params(d, jnp.float64), X, t)
+    lens = jax.random.randint(kl, (n,), m // 2, m + 1)
+    mask = (jnp.arange(m)[None, :] < lens[:, None]).astype(jnp.float64)
+    Y = jax.random.normal(ky, (n, m), jnp.float64) * mask
+    return K1, K2, mask, Y, jnp.float64(noise)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+def test_registry_lists_builtin_solvers():
+    assert {"cg", "pcg", "sgd"} <= set(list_solvers())
+    assert isinstance(get_solver("cg"), CGSolver)
+    assert isinstance(get_solver("pcg"), PCGSolver)
+    assert isinstance(get_solver("sgd"), SGDSolver)
+    # stateless singletons
+    assert get_solver("cg") is get_solver("cg")
+    # protocol conformance (runtime-checkable structural check)
+    for name in ("cg", "pcg", "sgd"):
+        assert isinstance(get_solver(name), Solver)
+
+
+def test_unknown_solver_raises_with_available_names():
+    with pytest.raises(ValueError, match="cg"):
+        get_solver("newton")
+
+
+def test_register_custom_solver_and_engine_routing():
+    """A custom registered solver must be reachable via config.solver from
+    the engine layer — engines route every solve through the registry."""
+    calls = {"solve": 0, "stacked": 0}
+
+    @register_solver("counting")
+    class CountingSolver(CGSolver):
+        def solve(self, A, b, config, x0=None):
+            calls["solve"] += 1
+            return super().solve(A, b, config, x0=x0)
+
+        def solve_stacked(self, A, rhs, config, *, probe_cols=0,
+                          subspace_dim=None, x0=None):
+            calls["stacked"] += 1
+            return super().solve_stacked(
+                A, rhs, config, probe_cols=probe_cols,
+                subspace_dim=subspace_dim, x0=x0)
+
+    try:
+        K1, K2, mask, Y, noise = _lk_problem()
+        cfg = LKGPConfig(solver="counting", cg_tol=1e-6, cg_max_iters=500)
+        eng = get_engine("iterative")
+        A = eng.operator_from_grams(K1, K2, mask, noise)
+        x = eng.solve(A, Y, cfg)
+        assert calls["solve"] == 1
+        st = eng.solve_stacked(A, Y[None], cfg)
+        assert calls["stacked"] == 1
+        assert isinstance(st, StackedSolveResult)
+        np.testing.assert_allclose(np.asarray(st.x[0]), np.asarray(x),
+                                   atol=1e-6)
+    finally:
+        SOLVERS.pop("counting", None)
+        from repro.core.solvers import base
+        base._SOLVER_SINGLETONS.pop("counting", None)
+
+
+# --------------------------------------------------------------------------
+# auto resolution (preserves the historic precond_rank routing)
+# --------------------------------------------------------------------------
+def test_resolve_solver_auto_routing():
+    K1, K2, mask, Y, noise = _lk_problem()
+    op = get_engine("iterative").operator_from_grams(K1, K2, mask, noise)
+    bare = lk_operator(K1, K2, mask, noise)
+
+    assert isinstance(resolve_solver(LKGPConfig()), CGSolver)
+    assert isinstance(resolve_solver(LKGPConfig(precond_rank=5), op),
+                      PCGSolver)
+    # bare closures carry no factors to precondition -> plain CG
+    assert isinstance(resolve_solver(LKGPConfig(precond_rank=5), bare),
+                      CGSolver)
+    # operator-free contexts trust the rank
+    assert isinstance(resolve_solver(LKGPConfig(precond_rank=5)), PCGSolver)
+    # explicit names always win
+    assert isinstance(resolve_solver(LKGPConfig(solver="sgd",
+                                                precond_rank=5), op),
+                      SGDSolver)
+
+
+# --------------------------------------------------------------------------
+# SGD solver
+# --------------------------------------------------------------------------
+def test_sgd_solve_matches_cg_on_lk_system():
+    K1, K2, mask, Y, noise = _lk_problem(seed=2)
+    A = lk_operator(K1, K2, mask, noise)
+    ref = cg_solve(A, Y, tol=1e-10, max_iters=4000)
+    res = sgd_solve(A, Y, tol=1e-8, max_iters=20_000)
+    assert not bool(jnp.any(res.breakdown))
+    assert float(jnp.max(res.rel_residual)) <= 1e-7
+    np.testing.assert_allclose(np.asarray(res.x), np.asarray(ref.x),
+                               atol=1e-5)
+    # diagnostics mirror CGResult semantics
+    assert int(res.iters) > 0
+    assert int(res.matvecs) > 0
+    assert res.col_iters is not None
+
+
+def test_sgd_batched_rhs_and_per_column_freezing():
+    """Stacked RHS share sweeps; a column warm-started at its solution is
+    converged from sweep 0 and contributes no matvec work."""
+    K1, K2, mask, Y, noise = _lk_problem(seed=4)
+    A = lk_operator(K1, K2, mask, noise)
+    x_star = cg_solve(A, Y, tol=1e-12, max_iters=4000).x
+    hard = Y + 0.3 * jnp.roll(Y, 1, axis=0) * mask
+    rhs = jnp.stack([Y, hard])
+    res = sgd_solve(A, rhs, tol=1e-6, max_iters=20_000,
+                    x0=jnp.stack([x_star, jnp.zeros_like(Y)]))
+    iters = int(res.iters)
+    assert iters > 0
+    assert int(res.col_iters[0]) == 0
+    assert int(res.col_iters[1]) == iters
+    assert int(res.matvecs) == iters    # only the active column counted
+    assert float(jnp.max(res.rel_residual)) <= 1e-6
+
+
+def test_sgd_warm_start_at_solution_is_free():
+    K1, K2, mask, Y, noise = _lk_problem(seed=5)
+    A = lk_operator(K1, K2, mask, noise)
+    x_star = sgd_solve(A, Y, tol=1e-8, max_iters=20_000).x
+    warm = sgd_solve(A, Y, tol=1e-6, max_iters=20_000, x0=x_star)
+    assert int(warm.iters) == 0
+
+
+def test_sgd_breakdown_flag_on_divergence():
+    """A wildly too-large explicit learning rate diverges; the non-finite
+    residual must raise breakdown instead of looping to max_iters."""
+    K1, K2, mask, Y, noise = _lk_problem(seed=6)
+    A = lk_operator(K1, K2, mask, noise)
+    res = sgd_solve(A, Y, tol=1e-10, max_iters=5000, lr=1e6)
+    assert bool(jnp.all(res.breakdown))
+    assert int(res.iters) < 5000
+
+
+def test_estimate_lmax_bounds_spectrum():
+    rng = np.random.default_rng(0)
+    Q, _ = np.linalg.qr(rng.standard_normal((30, 30)))
+    lam = np.linspace(1.0, 50.0, 30)
+    M = jnp.asarray(Q @ np.diag(lam) @ Q.T)
+    A = lambda u: (M @ u.reshape(-1, 1)).reshape(u.shape)
+    b = jnp.asarray(rng.standard_normal((6, 5)))
+    est = float(estimate_lmax(A, b, iters=30))
+    assert 0.8 * 50.0 <= est <= 50.0 * (1 + 1e-6)
+
+
+def test_engine_solver_config_selects_sgd():
+    """config.solver='sgd' must reach SGDSolver through the engine: the
+    solution matches CG and the stacked result reports no fused log-det
+    (SGD has no Lanczos correspondence)."""
+    K1, K2, mask, Y, noise = _lk_problem(seed=7)
+    eng = get_engine("iterative")
+    A = eng.operator_from_grams(K1, K2, mask, noise)
+    cfg_cg = LKGPConfig(solver="cg", cg_tol=1e-10, cg_max_iters=4000)
+    cfg_sgd = LKGPConfig(solver="sgd", cg_tol=1e-8, sgd_iters=20_000)
+    x_cg = eng.solve(A, Y, cfg_cg)
+    x_sgd = eng.solve(A, Y, cfg_sgd)
+    np.testing.assert_allclose(np.asarray(x_sgd), np.asarray(x_cg),
+                               atol=1e-5)
+    st = eng.solve_stacked(A, Y[None], cfg_sgd, probe_cols=1,
+                           subspace_dim=jnp.sum(mask))
+    assert st.logdet is None
+
+
+def test_matheron_pathwise_sgd_matches_cg_samples():
+    """sample_posterior_grid(solver='sgd'): every pathwise-conditioning
+    draw is an SGD solve; with the same key the samples must match the CG
+    path to solver tolerance."""
+    from repro.core import sample_posterior_grid
+
+    K1, K2, mask, Y, noise = _lk_problem(n=8, m=6, seed=8)
+    key = jax.random.PRNGKey(0)
+    kw = dict(n_train=8, Y=Y, mask=mask, noise=noise, n_samples=4,
+              cg_tol=1e-9, cg_max_iters=20_000)
+    s_cg = sample_posterior_grid(key, K1, K2, solver="cg", **kw)
+    s_sgd = sample_posterior_grid(key, K1, K2, solver="sgd", **kw)
+    assert s_sgd.shape == s_cg.shape
+    np.testing.assert_allclose(np.asarray(s_sgd), np.asarray(s_cg),
+                               atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# deprecation shim
+# --------------------------------------------------------------------------
+def test_core_cg_shim_warns_and_reexports():
+    sys.modules.pop("repro.core.cg", None)
+    with pytest.warns(DeprecationWarning, match="repro.core.solvers"):
+        shim = importlib.import_module("repro.core.cg")
+    from repro.core import solvers
+    assert shim.cg_solve is solvers.cg_solve
+    assert shim.cg_solve_tridiag is solvers.cg_solve_tridiag
+    assert shim.pcg_solve is solvers.pcg_solve
+    assert shim.CGResult is solvers.CGResult
+    assert shim.CGTridiag is solvers.CGTridiag
