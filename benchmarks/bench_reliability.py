@@ -1,0 +1,272 @@
+"""Reliability benchmark: availability under faults, escalation latency,
+crash recovery.
+
+Runs the fault-injection harness (:mod:`repro.testing.faults`) against the
+serving stack and writes ``BENCH_reliability.json`` with the acceptance
+booleans the CI gate (``check_regression.py --reliability``) enforces:
+
+* **availability** — a chaos workload (one tenant streaming NaN-poisoned
+  payloads every round, a mid-schedule crash + restore from checkpoint)
+  must not cost healthy tenants a single request: their availability is
+  1.0 and their final predictions are bitwise identical to a fault-free
+  control service that saw the same healthy traffic;
+* **escalation latency** — a guarded solve through a forced solver
+  breakdown (armed flaky solver -> instant fake failure -> first ladder
+  rung recovers via CG) must keep p99 latency within 5x of a clean
+  guarded CG solve on the same system. The fake failure costs no operator
+  sweeps, so the ratio measures guard/dispatch overhead plus one retry —
+  the regime the escalate policy is designed for;
+* **recovery** — restoring a crashed service from its checkpoint must
+  bring back every session warm: same generation, predictions bitwise
+  equal to the moment before the crash, no refits. Recovery wall time is
+  reported as information.
+
+    PYTHONPATH=src python benchmarks/bench_reliability.py [--quick] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import tempfile
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+from repro.core import LKGPConfig, get_engine, gram_matrices  # noqa: E402
+from repro.core import init_params  # noqa: E402
+from repro.core.solvers.guarded import guarded_solve  # noqa: E402
+from repro.data import sample_task  # noqa: E402
+from repro.serving import PredictionService, ServiceConfig  # noqa: E402
+from repro.serving.metrics import percentile  # noqa: E402
+from repro.testing import arm_flaky_solver, crash_and_restore  # noqa: E402
+from repro.testing import poison_nan  # noqa: E402
+
+
+def _summ(samples_s: list[float]) -> dict:
+    xs = sorted(samples_s)
+    return {"count": len(xs),
+            "p50_ms": round(percentile(xs, 0.50) * 1e3, 4),
+            "p99_ms": round(percentile(xs, 0.99) * 1e3, 4),
+            "mean_ms": round(sum(xs) / len(xs) * 1e3, 4)}
+
+
+def _grow(Y: np.ndarray, mask: np.ndarray, value: float) -> tuple:
+    """One more observed epoch per row — a healthy extend payload."""
+    Y, mask = np.array(Y), np.array(mask)
+    for row in range(mask.shape[0]):
+        k = int(mask[row].sum())
+        if k < mask.shape[1]:
+            mask[row, k] = 1.0
+            Y[row, k] = value
+    return Y, mask
+
+
+def bench_availability(tenants: int, rounds: int, n: int, m: int,
+                       lbfgs: int, workdir: str, out=print) -> dict:
+    """Chaos workload vs fault-free control; healthy tenants must not notice.
+
+    tenant-0 streams a NaN-poisoned payload every round (quarantined on the
+    chaos service, withheld on the control service so both see identical
+    *healthy* traffic); halfway through, the chaos service crashes right
+    after a checkpoint and is restored. Availability counts every healthy-
+    tenant observe AND predict that completes un-quarantined.
+    """
+    gp = LKGPConfig(lbfgs_iters=lbfgs, backend="dense")
+    make_cfg = lambda d: ServiceConfig(   # noqa: E731
+        gp=gp, refit_every=0, checkpoint_dir=d, checkpoint_every=0)
+    control = PredictionService(make_cfg(f"{workdir}/control"))
+    chaos = PredictionService(make_cfg(f"{workdir}/chaos"))
+
+    tasks = [sample_task(seed=i, n=n, m=m, d=4) for i in range(tenants)]
+    for svc in (control, chaos):
+        for i, tk in enumerate(tasks):
+            svc.observe(f"tenant-{i}", "run", Y=tk.Y, mask=tk.mask,
+                        X=tk.X, t=tk.t)
+
+    healthy = list(range(1, tenants))
+    grids = {i: (np.asarray(tasks[i].Y), np.asarray(tasks[i].mask))
+             for i in healthy}
+    served = attempted = quarantines = 0
+    crash_round = rounds // 2
+    for rnd in range(rounds):
+        bad = poison_nan(tasks[0].Y, tasks[0].mask)
+        res = chaos.observe("tenant-0", "run", *bad)
+        quarantines += int(res["action"] == "quarantined")
+        for i in healthy:
+            grids[i] = _grow(*grids[i], value=0.1 * (rnd + 1))
+            for svc in (control, chaos):
+                r = svc.observe(f"tenant-{i}", "run",
+                                Y=grids[i][0], mask=grids[i][1])
+                if svc is chaos:
+                    attempted += 1
+                    served += int(r["action"] != "quarantined")
+            p = chaos.predict(f"tenant-{i}", "run")
+            attempted += 1
+            served += int(p.mean is not None)
+        if rnd == crash_round:
+            chaos.checkpoint()
+            chaos, restored = crash_and_restore(chaos)
+            assert restored == tenants
+
+    bitwise = True
+    for i in healthy:
+        want = control.predict(f"tenant-{i}", "run")
+        got = chaos.predict(f"tenant-{i}", "run")
+        bitwise = bitwise and bool(
+            np.array_equal(want.mean, got.mean)
+            and np.array_equal(want.var, got.var))
+    availability = served / max(attempted, 1)
+    row = {"tenants": tenants, "rounds": rounds, "n": n, "m": m,
+           "healthy_requests": attempted, "healthy_served": served,
+           "availability": availability,
+           "quarantines": quarantines,
+           "expected_quarantines": rounds,
+           "healthy_bitwise_equal_to_control": bitwise}
+    out(f"availability tenants={tenants} rounds={rounds}: "
+        f"{served}/{attempted} healthy requests served "
+        f"({availability:.3f}), {quarantines} quarantines, "
+        f"bitwise={bitwise}")
+    return row
+
+
+def bench_escalation_latency(n: int, m: int, solves: int, out=print) -> dict:
+    """Clean guarded CG solves vs flaky-armed escalated solves, p99 ratio."""
+    key = jax.random.PRNGKey(0)
+    kx, ky = jax.random.split(key)
+    X = jax.random.uniform(kx, (n, 3), jax.numpy.float64)
+    t = jax.numpy.linspace(0.05, 1.0, m).astype(jax.numpy.float64)
+    K1, K2 = gram_matrices(init_params(3, jax.numpy.float64), X, t)
+    mask = jax.numpy.ones((n, m), jax.numpy.float64)
+    Y = jax.random.normal(ky, (n, m), jax.numpy.float64)
+    noise = jax.numpy.float64(0.05)
+    A = get_engine("iterative").operator_from_grams(K1, K2, mask, noise)
+
+    clean_cfg = LKGPConfig(solver="cg")
+    flaky_cfg = LKGPConfig(solver="flaky")
+
+    # Warmup: compile the CG solve once for both paths.
+    jax.block_until_ready(guarded_solve(A, Y, clean_cfg).x)
+
+    clean, escalated = [], []
+    for _ in range(solves):
+        t0 = time.perf_counter()
+        jax.block_until_ready(guarded_solve(A, Y, clean_cfg).x)
+        clean.append(time.perf_counter() - t0)
+    for _ in range(solves):
+        arm_flaky_solver(1)
+        t0 = time.perf_counter()
+        res = guarded_solve(A, Y, flaky_cfg)
+        jax.block_until_ready(res.x)
+        escalated.append(time.perf_counter() - t0)
+        assert res.trace[-1].ok and len(res.trace) == 2
+
+    clean_s, escalated_s = _summ(clean), _summ(escalated)
+    ratio = escalated_s["p99_ms"] / max(clean_s["p99_ms"], 1e-9)
+    row = {"n": n, "m": m, "solves": solves,
+           "clean": clean_s, "escalated": escalated_s,
+           "p99_ratio": round(ratio, 2)}
+    out(f"escalation latency n={n} m={m} solves={solves}: clean p99 "
+        f"{clean_s['p99_ms']:.2f}ms escalated p99 "
+        f"{escalated_s['p99_ms']:.2f}ms -> {ratio:.2f}x")
+    return row
+
+
+def bench_recovery(tenants: int, n: int, m: int, lbfgs: int,
+                   workdir: str, out=print) -> dict:
+    """Checkpoint -> crash -> restore; every session must come back warm."""
+    gp = LKGPConfig(lbfgs_iters=lbfgs, backend="dense")
+    svc = PredictionService(ServiceConfig(
+        gp=gp, refit_every=0, checkpoint_dir=f"{workdir}/recovery"))
+    before = {}
+    for i in range(tenants):
+        tk = sample_task(seed=100 + i, n=n, m=m, d=4)
+        svc.observe(f"tenant-{i}", "run", Y=tk.Y, mask=tk.mask,
+                    X=tk.X, t=tk.t)
+        before[i] = svc.predict(f"tenant-{i}", "run")
+    svc.checkpoint()
+
+    t0 = time.perf_counter()
+    svc2, restored = crash_and_restore(svc)
+    recovery_s = time.perf_counter() - t0
+    warm = restored == tenants
+    t0 = time.perf_counter()
+    for i in range(tenants):
+        got = svc2.predict(f"tenant-{i}", "run")
+        warm = warm and bool(
+            np.array_equal(before[i].mean, got.mean)
+            and np.array_equal(before[i].var, got.var)
+            and got.generation == before[i].generation)
+    first_predict_s = time.perf_counter() - t0
+    row = {"tenants": tenants, "n": n, "m": m,
+           "sessions_restored": restored,
+           "all_sessions_warm": warm,
+           "refits_after_restore": svc2.counters["refits"].value,
+           "restore_ms": round(recovery_s * 1e3, 2),
+           "first_predictions_ms": round(first_predict_s * 1e3, 2)}
+    out(f"recovery tenants={tenants}: restored {restored} sessions in "
+        f"{row['restore_ms']}ms, warm={warm}, first predictions "
+        f"{row['first_predictions_ms']}ms")
+    return row
+
+
+def main(argv=None, out=print):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizes (fewer tenants/rounds/solves)")
+    ap.add_argument("--out", default="BENCH_reliability.json")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        tenants, rounds, solves, n, m, lbfgs = 4, 3, 30, 8, 10, 5
+    else:
+        tenants, rounds, solves, n, m, lbfgs = 6, 6, 100, 16, 12, 10
+
+    out("# bench_reliability: availability, escalation latency, recovery")
+    with tempfile.TemporaryDirectory() as workdir:
+        availability = bench_availability(tenants, rounds, n, m, lbfgs,
+                                          workdir, out=out)
+        latency = bench_escalation_latency(n, m, solves, out=out)
+        recovery = bench_recovery(tenants, n, m, lbfgs, workdir, out=out)
+
+    acceptance = {
+        "healthy_tenant_availability_is_1":
+            availability["availability"] == 1.0,
+        "every_bad_payload_quarantined":
+            availability["quarantines"]
+            == availability["expected_quarantines"],
+        "healthy_tenants_bitwise_unchanged_under_faults":
+            bool(availability["healthy_bitwise_equal_to_control"]),
+        "escalated_p99_within_5x_clean": latency["p99_ratio"] <= 5.0,
+        "restore_recovers_all_sessions_warm":
+            bool(recovery["all_sessions_warm"]),
+    }
+    payload = {
+        "meta": {
+            "jax_backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "platform": platform.platform(),
+            "quick": args.quick,
+            "config": {"tenants": tenants, "rounds": rounds,
+                       "solves": solves, "n": n, "m": m,
+                       "lbfgs_iters": lbfgs},
+        },
+        "availability": availability,
+        "latency": latency,
+        "recovery": recovery,
+        "acceptance": acceptance,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    out(f"# wrote {args.out}")
+    for claim, value in acceptance.items():
+        out(f"acceptance {claim}: {value}")
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,13 @@ Fails (exit 1) when
   rel-err <= 1e-4, and every (n, solver) crossover cell must be present.
   Wall times include compile and are machine-relative, so like ``--mvm``
   the section gates on its acceptance booleans only, or
+* any acceptance claim measured by ``bench_reliability`` is false: under
+  the injected-fault schedule every healthy tenant keeps availability 1.0
+  with predictions bitwise equal to a fault-free control run, every bad
+  payload is quarantined, a forced-breakdown escalated solve keeps p99
+  within 5x of a clean guarded solve, and checkpoint restore brings every
+  session back warm. All deterministic or machine-relative, so the
+  section gates on its acceptance booleans only, or
 * any acceptance claim measured by ``bench_serving`` is false: the
   state-keyed posterior cache must make warm per-request latency >= 3x
   lower than cache-bypassed requests, coalesced prediction must sustain
@@ -114,7 +121,8 @@ def _check_acceptance(name: str, payload: dict, base_payload: dict,
 def check(baseline: dict, backends: dict | None, automl: dict | None,
           factor: float, curvepred: dict | None = None,
           mvm: dict | None = None, serving: dict | None = None,
-          scaling: dict | None = None) -> list[str]:
+          scaling: dict | None = None,
+          reliability: dict | None = None) -> list[str]:
     failures = []
 
     if backends is not None:
@@ -220,6 +228,32 @@ def check(baseline: dict, backends: dict | None, automl: dict | None,
                   f"{sc['tally_delta']} info_resident="
                   f"{sc['solve_info_resident']}")
 
+    if reliability is not None:
+        for claim, value in reliability["acceptance"].items():
+            if value:
+                print(f"ok        reliability acceptance: {claim}")
+            else:
+                failures.append(f"CLAIM FAILED reliability acceptance: "
+                                f"{claim}")
+        av = reliability.get("availability", {})
+        if av:
+            print(f"info      reliability availability: "
+                  f"{av['healthy_served']}/{av['healthy_requests']} healthy "
+                  f"requests served ({av['availability']:.3f}), "
+                  f"{av['quarantines']} quarantines, bitwise="
+                  f"{av['healthy_bitwise_equal_to_control']}")
+        lat = reliability.get("latency", {})
+        if lat:
+            print(f"info      reliability escalation (n={lat['n']} "
+                  f"m={lat['m']}): clean p99 {lat['clean']['p99_ms']}ms vs "
+                  f"escalated p99 {lat['escalated']['p99_ms']}ms "
+                  f"({lat['p99_ratio']}x)")
+        rec = reliability.get("recovery", {})
+        if rec:
+            print(f"info      reliability recovery: "
+                  f"{rec['sessions_restored']} sessions in "
+                  f"{rec['restore_ms']}ms, warm={rec['all_sessions_warm']}")
+
     if scaling is not None:
         for claim, value in scaling["acceptance"].items():
             if value:
@@ -258,6 +292,8 @@ def main(argv=None) -> int:
                     help="BENCH_serving json to gate (omit to skip)")
     ap.add_argument("--scaling", default=None,
                     help="BENCH_scaling json to gate (omit to skip)")
+    ap.add_argument("--reliability", default=None,
+                    help="BENCH_reliability json to gate (omit to skip)")
     ap.add_argument("--factor", type=float, default=2.0)
     args = ap.parse_args(argv)
 
@@ -275,15 +311,16 @@ def main(argv=None) -> int:
     mvm = load(args.mvm)
     serving = load(args.serving)
     scaling = load(args.scaling)
+    reliability = load(args.reliability)
     if all(p is None for p in (backends, automl, curvepred, mvm, serving,
-                               scaling)):
+                               scaling, reliability)):
         print("benchmark gate FAILED: no sections given — pass at least "
               "one of --backends/--automl/--curvepred/--mvm/--serving/"
-              "--scaling")
+              "--scaling/--reliability")
         return 1
 
     failures = check(baseline, backends, automl, args.factor, curvepred,
-                     mvm, serving, scaling)
+                     mvm, serving, scaling, reliability)
     if failures:
         print("\n".join(["", "benchmark gate FAILED:"] + failures))
         return 1

@@ -29,8 +29,8 @@ import numpy as np
 
 __all__ = ["iter_eqns", "find_f64", "find_host_callbacks", "audit_mll",
            "audit_fit_objective", "audit_posterior_final",
-           "audit_fused_mvm", "audit_solvers", "audit_dist_fused_mvm",
-           "audit_refit_retrace", "run_all_audits"]
+           "audit_fused_mvm", "audit_solvers", "audit_guarded_solves",
+           "audit_dist_fused_mvm", "audit_refit_retrace", "run_all_audits"]
 
 _CALLBACK_PRIMS = ("pure_callback", "io_callback", "debug_callback",
                    "callback")
@@ -231,6 +231,54 @@ def audit_solvers() -> list[str]:
     return failures
 
 
+def audit_guarded_solves() -> list[str]:
+    """Guarded solves add NOTHING to traced programs.
+
+    The escalation ladder is host-side control flow that must bypass
+    itself under tracing. Three structural claims, each per engine entry
+    point (``solve_result`` / ``solve_stacked``): with f32 inputs the
+    traced program (a) introduces no f64, (b) introduces no host
+    callbacks, and (c) is equation-for-equation IDENTICAL to the raw
+    unguarded solver's jaxpr — the guard may not even add a no-op
+    equation, or the jit caches of guarded and historical programs would
+    diverge.
+    """
+    from repro.core.engines import get_engine
+    from repro.core.solvers import resolve_solver
+    from repro.core.state import LKGPConfig
+
+    rng = np.random.default_rng(0)
+    n, m = 8, 6
+    K1 = rng.normal(size=(n, n)).astype(np.float32)
+    K1 = K1 @ K1.T + n * np.eye(n, dtype=np.float32)
+    K2 = rng.normal(size=(m, m)).astype(np.float32)
+    K2 = K2 @ K2.T + m * np.eye(m, dtype=np.float32)
+    mask = (rng.random((n, m)) < 0.8).astype(np.float32)
+    mask[:, 0] = 1.0
+    b = (rng.normal(size=(n, m)) * mask).astype(np.float32)
+
+    engine = get_engine("iterative")
+    failures = []
+    for policy in ("strict", "escalate", "best_effort"):
+        cfg = LKGPConfig(cg_max_iters=32, solve_policy=policy)
+        A = engine.operator_from_grams(jnp.asarray(K1), jnp.asarray(K2),
+                                       jnp.asarray(mask), 0.1)
+        guarded = jax.make_jaxpr(
+            lambda rhs: engine.solve_result(A, rhs, cfg).x)(b)
+        failures += _audit_jaxpr(f"guarded_solve[{policy}]", guarded)
+        raw = jax.make_jaxpr(
+            lambda rhs: resolve_solver(cfg, A).solve(A, rhs, cfg).x)(b)
+        if str(guarded) != str(raw):
+            failures.append(
+                f"guarded_solve[{policy}]: traced program differs from the "
+                "raw solver's — the guard leaks into traced computations")
+        stacked = jax.make_jaxpr(
+            lambda rhs: engine.solve_stacked(A, rhs, cfg).x)(
+                np.stack([b, b]))
+        failures += _audit_jaxpr(f"guarded_solve_stacked[{policy}]", stacked)
+    return failures
+
+
 def _find_pallas_in_shard_map(jaxpr) -> int:
     """Count pallas_call equations nested inside shard_map equations."""
     count = 0
@@ -309,6 +357,7 @@ def run_all_audits(verbose: bool = False) -> list[str]:
               ("Posterior.final f64/callback", audit_posterior_final),
               ("fused MVM f64/callback", audit_fused_mvm),
               ("solver stack f64/callback", audit_solvers),
+              ("guarded solves f64/callback", audit_guarded_solves),
               ("distributed fused MVM", audit_dist_fused_mvm),
               ("refit retrace", audit_refit_retrace)]
     failures: list[str] = []

@@ -37,9 +37,13 @@ from .precond import (pivoted_cholesky_grid, pivoted_cholesky_latent,
 from .priors import noise_prior_logpdf, x_lengthscale_prior_logpdf
 from .slq import (lanczos, rademacher_probes, slq_logdet,
                   slq_logdet_from_tridiag, tridiag_from_cg)
-from .solvers import (SOLVERS, CGResult, CGTridiag, Solver, cg_solve,
-                      cg_solve_tridiag, get_solver, list_solvers, pcg_solve,
-                      register_solver, resolve_solver, sgd_solve)
+from .errors import ObservationError, check_grid_columns, check_observed_finite
+from .solvers import (SOLVE_POLICIES, SOLVERS, CGResult, CGTridiag,
+                      EscalationStep, GuardedSolveError, GuardedSolver,
+                      Solver, cg_solve, cg_solve_tridiag, escalation_tally,
+                      get_solver, guarded_solve, guarded_solve_stacked,
+                      list_solvers, pcg_solve, register_solver,
+                      resolve_solver, sgd_solve)
 from .state import (GPData, LKGPConfig, LKGPParams, LKGPState, extend, fit,
                     fit_batch, gram_matrices, init_params, log_prior, refit,
                     resolve_backend, stack_states, unstack)
@@ -50,6 +54,10 @@ __all__ = [
     "CGResult", "CGTridiag", "cg_solve", "cg_solve_tridiag", "pcg_solve",
     "sgd_solve", "Solver", "SOLVERS", "get_solver", "register_solver",
     "list_solvers", "resolve_solver",
+    # reliability: guarded solves + typed input errors
+    "GuardedSolver", "GuardedSolveError", "EscalationStep", "SOLVE_POLICIES",
+    "guarded_solve", "guarded_solve_stacked", "escalation_tally",
+    "ObservationError", "check_observed_finite", "check_grid_columns",
     "KERNELS_1D", "matern12", "matern32",
     "matern52", "rbf_ard", "LBFGSResult", "lbfgs_minimize",
     "sample_posterior_grid", "prior_residual_draws", "kronecker_correction",

@@ -36,7 +36,8 @@ import jax.numpy as jnp
 from .mvm import kron_dense, lk_mvm
 from .precond import pivoted_cholesky_grid, woodbury_preconditioner
 from .slq import slq_logdet
-from .solvers import CGResult, StackedSolveResult, resolve_solver
+from .solvers import (CGResult, StackedSolveResult, escalation_tally,
+                      guarded_solve, guarded_solve_stacked)
 from .state import GPData, LKGPConfig, LKGPParams, gram_matrices
 
 __all__ = [
@@ -44,7 +45,7 @@ __all__ = [
     "list_backends", "DenseEngine", "IterativeEngine", "PallasEngine",
     "DistributedEngine", "CustomMVMEngine", "LatentKroneckerOperator",
     "StackedSolveResult", "make_mll", "mll_cholesky", "make_mll_iterative",
-    "solve_tally",
+    "solve_tally", "escalation_tally",
 ]
 
 _LOG_2PI = math.log(2.0 * math.pi)
@@ -66,10 +67,22 @@ def solve_tally() -> int:
     return _solve_tally
 
 
-def _bump_tally() -> None:
+def _bump_tally(n: int = 1) -> None:
     global _solve_tally
     with _TALLY_LOCK:
-        _solve_tally += 1
+        _solve_tally += n
+
+
+def _bump_escalations(res) -> None:
+    """Count extra escalation-ladder attempts as solve entries.
+
+    Guarded eager solves attach their escalation trace (one entry per
+    attempt, including the base one); each attempt beyond the first was a
+    full extra solve against the operator, so the tally reflects it.
+    """
+    trace = getattr(res, "trace", None)
+    if trace and len(trace) > 1:
+        _bump_tally(len(trace) - 1)
 
 
 @runtime_checkable
@@ -187,7 +200,13 @@ class DenseEngine:
         # x0 is accepted for interface uniformity; the exact solve ignores it.
         _bump_tally()
         if not isinstance(A, _DenseOperator):
-            return resolve_solver(config, A).solve(A, b, config, x0=x0).x
+            # Non-dense operator handed to the dense engine: route through
+            # the guarded iterative solve and keep the diagnostics (this
+            # path used to drop them entirely).
+            res = guarded_solve(A, b, config, x0=x0)
+            _bump_escalations(res)
+            _stash_diagnostics(A, res)
+            return res.x
         L = A.chol()
         N = A.mask.size
         bb = (b * A.mask).reshape(-1, N)          # (batch, N)
@@ -269,10 +288,14 @@ class IterativeEngine:
 
         The solve strategy comes from the registry (``config.solver``:
         cg / pcg / sgd; "auto" keeps the historic PCG-iff-precond_rank
-        routing) — see :mod:`repro.core.solvers`.
+        routing) — see :mod:`repro.core.solvers`. Eager solves run under
+        the ``config.solve_policy`` escalation guard
+        (:mod:`repro.core.solvers.guarded`); traced solves pass through
+        unguarded.
         """
         _bump_tally()
-        res = resolve_solver(config, A).solve(A, b, config, x0=x0)
+        res = guarded_solve(A, b, config, x0=x0)
+        _bump_escalations(res)
         _stash_diagnostics(A, res)
         return res
 
@@ -287,12 +310,14 @@ class IterativeEngine:
         CG-Lanczos tridiagonals are recorded during the SAME solve and
         turned into the log-determinant estimate — no separate Lanczos
         sweep. PCG/SGD solves report ``logdet=None`` and the caller falls
-        back to the separate SLQ pass.
+        back to the separate SLQ pass. Eager solves run under the
+        ``config.solve_policy`` escalation guard; traced solves pass
+        through unguarded.
         """
         _bump_tally()
-        st = resolve_solver(config, A).solve_stacked(
-            A, rhs, config, probe_cols=probe_cols,
-            subspace_dim=subspace_dim, x0=x0)
+        st = guarded_solve_stacked(A, rhs, config, probe_cols=probe_cols,
+                                   subspace_dim=subspace_dim, x0=x0)
+        _bump_escalations(st.result)
         _stash_diagnostics(A, st.result)
         return st
 

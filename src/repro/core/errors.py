@@ -1,0 +1,81 @@
+"""Typed error surface for the reliability layer.
+
+The streaming boundary (``fit`` / ``extend`` /
+``PredictionService.observe``) validates payloads eagerly on the host and
+rejects bad ones with :class:`ObservationError` — a ``ValueError`` subclass
+so legacy ``except ValueError`` callers keep working — carrying the
+offending indices so the serving layer can log *which* cells were bad
+without re-deriving them. Solver-side failures escalate through
+:mod:`repro.core.solvers.guarded` and surface as
+:class:`~repro.core.solvers.guarded.GuardedSolveError`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["ObservationError", "check_observed_finite", "check_grid_columns"]
+
+_MAX_NAMED = 8   # cap on indices spelled out in an error message
+
+
+class ObservationError(ValueError):
+    """A streamed observation payload is invalid.
+
+    ``indices`` names the offending cells/columns (possibly truncated in
+    the message, never in the attribute).
+    """
+
+    def __init__(self, message: str, indices=()):
+        super().__init__(message)
+        self.indices = tuple(map(tuple, indices)) if np.ndim(indices) > 1 \
+            else tuple(indices)
+
+
+def _named(indices) -> str:
+    shown = list(indices[:_MAX_NAMED])
+    more = len(indices) - len(shown)
+    return f"{shown}" + (f" (+{more} more)" if more > 0 else "")
+
+
+def check_observed_finite(Y, mask, what: str = "Y") -> None:
+    """Raise :class:`ObservationError` on non-finite values at observed cells.
+
+    Unobserved cells may hold anything (they are masked out of every
+    product); observed cells must be finite or the solve/transform chain
+    silently propagates NaNs into every tenant product derived from them.
+    """
+    Y = np.asarray(Y)
+    mask = np.asarray(mask)
+    bad = np.logical_and(mask > 0, ~np.isfinite(Y))
+    if np.any(bad):
+        cells = np.argwhere(bad)
+        raise ObservationError(
+            f"non-finite {what} at {int(cells.shape[0])} observed "
+            f"cell(s): {_named([tuple(map(int, c)) for c in cells])}",
+            indices=[tuple(map(int, c)) for c in cells])
+
+
+def check_grid_columns(mask, m: int, what: str = "mask") -> None:
+    """Reject masks marking cells outside the budget grid ``t``.
+
+    A mask wider than the session's ``m`` budgets that marks any column
+    ``>= m`` refers to progression values the grid does not contain; name
+    the offending column indices instead of failing later with an opaque
+    broadcast/concatenate error (or, worse, silently truncating).
+    """
+    mask = np.asarray(mask)
+    m_got = mask.shape[-1]
+    if m_got == m:
+        return
+    if m_got > m:
+        extra = mask[..., m:]
+        marked = np.argwhere(np.any(extra > 0, axis=tuple(
+            range(extra.ndim - 1)))) + m
+        cols = [int(c) for c in marked.reshape(-1)]
+        if cols:
+            raise ObservationError(
+                f"{what} marks observed cells outside the budget grid "
+                f"(m={m}): columns {_named(cols)}", indices=cols)
+    raise ObservationError(
+        f"{what} has {m_got} budget columns but the session grid has "
+        f"m={m}", indices=[])

@@ -14,6 +14,9 @@ from .base import (CGSolver, PCGSolver, SGDSolver, Solver, SOLVERS,
                    StackedSolveResult, get_solver, list_solvers,
                    register_solver, resolve_solver)
 from .cg import CGResult, CGTridiag, cg_solve, cg_solve_tridiag
+from .guarded import (SOLVE_POLICIES, EscalationStep, GuardedSolveError,
+                      GuardedSolver, escalation_tally, guarded_solve,
+                      guarded_solve_stacked, reset_escalation_tally)
 from .pcg import pcg_solve
 from .sgd import estimate_lmax, sgd_solve
 
@@ -23,4 +26,7 @@ __all__ = [
     "Solver", "SOLVERS", "register_solver", "get_solver", "list_solvers",
     "resolve_solver", "StackedSolveResult",
     "CGSolver", "PCGSolver", "SGDSolver",
+    "GuardedSolver", "GuardedSolveError", "EscalationStep", "SOLVE_POLICIES",
+    "guarded_solve", "guarded_solve_stacked", "escalation_tally",
+    "reset_escalation_tally",
 ]

@@ -50,11 +50,30 @@ class StackedSolveResult(NamedTuple):
     A's, and SGD solves have no Lanczos correspondence at all — callers
     fall back to a separate SLQ pass); ``result`` carries the block
     solver's per-column diagnostics (iterations, residuals, breakdown
-    flags, active-column MVM count).
+    flags, active-column MVM count). The per-column ``breakdown`` /
+    ``col_iters`` diagnostics are also exposed directly on the stacked
+    result, so ``solve_info`` consumers can report WHICH right-hand-side
+    columns degraded without reaching through ``result``.
     """
     x: jnp.ndarray
     logdet: jnp.ndarray | None
     result: CGResult
+
+    @property
+    def breakdown(self) -> jnp.ndarray | None:
+        """Per-RHS-column breakdown flags of the underlying block solve."""
+        return None if self.result is None else self.result.breakdown
+
+    @property
+    def col_iters(self) -> jnp.ndarray | None:
+        """Per-RHS-column iteration counts of the underlying block solve."""
+        return None if self.result is None else self.result.col_iters
+
+    @property
+    def trace(self) -> Any:
+        """Escalation trace of the guarded solve that produced this result
+        (None for unguarded or in-trace solves)."""
+        return None if self.result is None else self.result.trace
 
 
 @runtime_checkable

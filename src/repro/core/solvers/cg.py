@@ -29,7 +29,7 @@ loop the solver adds:
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +44,11 @@ class CGResult(NamedTuple):
     breakdown: jnp.ndarray | None = None   # (...,) bool: pAp <= 0 observed
     col_iters: jnp.ndarray | None = None   # (...,) int32 per-system iters
     matvecs: jnp.ndarray | None = None     # scalar int32: active-column MVMs
+    # Escalation trace attached by repro.core.solvers.guarded on EAGER
+    # solves: a tuple of EscalationStep records (None for raw solver calls
+    # and for solves inside traced programs, where the guard passes
+    # through). Lives on the diagnostics path only — never a traced value.
+    trace: Any = None
 
 
 class CGTridiag(NamedTuple):

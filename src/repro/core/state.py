@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import gp_kernels as gk
+from .errors import ObservationError, check_grid_columns, check_observed_finite
 from .lbfgs import lbfgs_minimize
 from .priors import noise_prior_logpdf, x_lengthscale_prior_logpdf
 from .slq import rademacher_probes
@@ -98,6 +99,18 @@ class LKGPConfig:
     posterior_cache: bool = True
     seed: int = 0
     use_pallas: bool = False        # legacy alias for backend="pallas"
+    # Reliability policy for eager engine solves (repro.core.solvers.guarded):
+    # "strict" raises GuardedSolveError on any degraded solve; "escalate"
+    # (default) walks the jitter -> solver-switch -> dense-fallback ladder
+    # and raises only if it is exhausted; "best_effort" never raises and
+    # returns the least-degraded attempt. Solves inside jitted programs
+    # (the fit objective) bypass the guard entirely, so none of these
+    # fields affect traced computations or the jit cache
+    # (_objective_cache_key deliberately excludes them).
+    solve_policy: str = "escalate"  # "strict" | "escalate" | "best_effort"
+    guard_retries: int = 3          # max jitter-escalation retries
+    guard_jitter_max: float = 1e-2  # jitter ladder cap (starts at 10*jitter)
+    guard_dense_max: int = 4096     # max mask.size for dense Cholesky fallback
 
 
 def init_params(d: int, dtype=jnp.float64) -> LKGPParams:
@@ -287,6 +300,16 @@ def fit(X, t, Y, mask, config: LKGPConfig | None = None,
     t = jnp.asarray(t, dtype)
     Y = jnp.asarray(Y, dtype)
     mask = jnp.asarray(mask, dtype)
+    if Y.shape != mask.shape:
+        raise ObservationError(
+            f"Y shape {Y.shape} does not match mask shape {mask.shape}")
+    check_grid_columns(mask, t.shape[-1])
+    check_observed_finite(Y, mask)
+    # Zero unobserved cells: every downstream use is masked, so this is a
+    # no-op for finite payloads, and it makes the documented contract
+    # ("unobserved cells may hold anything") true even for NaN/inf there
+    # (IEEE NaN*0 = NaN would otherwise poison Y*mask reductions).
+    Y = jnp.where(mask > 0, Y, jnp.zeros_like(Y))
 
     x_tf, t_tf, y_tf = _fit_transforms(X, t, Y, mask)
     Xn, tn, Yn = x_tf(X), t_tf(t), y_tf(Y)
@@ -354,6 +377,12 @@ def fit_batch(X, t, Y, mask, config: LKGPConfig | None = None,
         t = jnp.broadcast_to(t, (B, t.shape[0]))
     Y = jnp.asarray(Y, dtype)
     mask = jnp.asarray(mask, dtype)
+    if Y.shape != mask.shape:
+        raise ObservationError(
+            f"Y shape {Y.shape} does not match mask shape {mask.shape}")
+    check_grid_columns(mask, t.shape[-1])
+    check_observed_finite(Y, mask)
+    Y = jnp.where(mask > 0, Y, jnp.zeros_like(Y))   # see fit()
 
     x_tf = jax.vmap(XTransform.fit)(X)
     t_tf = jax.vmap(TTransform.fit)(t)
@@ -447,6 +476,16 @@ def extend(state: LKGPState, new_Y, new_mask, new_X=None) -> LKGPState:
     dtype = state.Y.dtype
     new_Y = jnp.asarray(new_Y, dtype)
     new_mask = jnp.asarray(new_mask, dtype)
+    if new_Y.shape != new_mask.shape:
+        raise ObservationError(
+            f"new_Y shape {new_Y.shape} does not match new_mask shape "
+            f"{new_mask.shape}")
+    # Reject masks marking cells outside the budget grid t (and budget-axis
+    # shape mismatches generally) with a typed error naming the offending
+    # columns, instead of an opaque broadcast/concatenate failure below.
+    check_grid_columns(new_mask, state.m, what="new_mask")
+    check_observed_finite(new_Y, new_mask, what="new_Y")
+    new_Y = jnp.where(new_mask > 0, new_Y, jnp.zeros_like(new_Y))  # see fit()
 
     if new_X is None:
         if new_Y.shape != state.Y.shape:

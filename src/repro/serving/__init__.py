@@ -9,7 +9,11 @@ Layered store -> batcher -> service:
 * :mod:`~repro.serving.service` — :class:`PredictionService`: cold fit /
   stream ``extend`` / warm ``refit`` lifecycle, per-request and coalesced
   prediction through one vmapped posterior, metrics;
-* :mod:`~repro.serving.metrics` — latency percentiles and counters.
+* :mod:`~repro.serving.metrics` — latency percentiles, counters, and the
+  structured :class:`EventLog` the reliability layer records into;
+* :mod:`~repro.serving.checkpoint` — session durability: periodic
+  :class:`ServiceCheckpointer` snapshots of the store + observation log,
+  and the template-based restore behind ``PredictionService.restore()``.
 
 Cache semantics in one line: solves are cached on the state object
 (:mod:`repro.core.posterior`), sessions cache their stacked prediction
@@ -17,7 +21,8 @@ view, and every ``observe`` swaps the state — so invalidation is object
 replacement, never bookkeeping.
 """
 from .batcher import CoalescingBatcher, coalesce_sessions, stack_signature
-from .metrics import Counter, LatencyRecorder
+from .checkpoint import ObservationLog, ServiceCheckpointer, state_template
+from .metrics import Counter, EventLog, LatencyRecorder
 from .service import Prediction, PredictionService, ServiceConfig
 from .store import Session, SessionKey, SessionStore
 
@@ -25,5 +30,6 @@ __all__ = [
     "PredictionService", "ServiceConfig", "Prediction",
     "SessionStore", "SessionKey", "Session",
     "CoalescingBatcher", "coalesce_sessions", "stack_signature",
-    "LatencyRecorder", "Counter",
+    "LatencyRecorder", "Counter", "EventLog",
+    "ObservationLog", "ServiceCheckpointer", "state_template",
 ]

@@ -1,17 +1,21 @@
 """Lightweight, dependency-free service metrics.
 
 A :class:`LatencyRecorder` keeps a bounded window of samples and reports
-percentiles over it; :class:`Counter` is a thread-safe monotonic counter.
-Both expose ``snapshot()`` dicts that the service aggregates into one
+percentiles over it; :class:`Counter` is a thread-safe monotonic counter;
+:class:`EventLog` is a bounded structured log of notable service events
+(quarantined observations, escalated solves, checkpoint/restore activity).
+All expose ``snapshot()`` dicts that the service aggregates into one
 metrics payload — the same shape ``benchmarks/bench_serving.py`` writes to
 ``BENCH_serving.json``.
 """
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
+from typing import Any
 
-__all__ = ["LatencyRecorder", "Counter", "percentile"]
+__all__ = ["LatencyRecorder", "Counter", "EventLog", "percentile"]
 
 
 def percentile(sorted_values: list[float], q: float) -> float:
@@ -41,6 +45,44 @@ class Counter:
     @property
     def value(self) -> int:
         return self._value
+
+
+class EventLog:
+    """Bounded, thread-safe structured event log.
+
+    The reliability layer records one entry per notable event — a
+    quarantined observation, an escalated solve, a checkpoint written, a
+    restore — as a plain dict (``kind`` + free-form fields + monotonic
+    ``seq`` + wall-clock ``time``). Bounded so a misbehaving tenant cannot
+    grow service memory without limit; ``count(kind)`` stays exact over the
+    process lifetime even after old entries roll off the window.
+    """
+
+    def __init__(self, window: int = 4096) -> None:
+        self._events: deque[dict] = deque(maxlen=window)
+        self._counts: dict[str, int] = {}
+        self._seq = 0
+        self._lock = threading.Lock()
+
+    def record(self, kind: str, **fields: Any) -> dict:
+        with self._lock:
+            event = {"kind": kind, "seq": self._seq, "time": time.time(),
+                     **fields}
+            self._seq += 1
+            self._events.append(event)
+            self._counts[kind] = self._counts.get(kind, 0) + 1
+        return event
+
+    def count(self, kind: str) -> int:
+        """Total events of ``kind`` recorded (not bounded by the window)."""
+        with self._lock:
+            return self._counts.get(kind, 0)
+
+    def snapshot(self) -> dict:
+        """Per-kind totals plus the most recent window of events."""
+        with self._lock:
+            return {"counts": dict(self._counts),
+                    "recent": [dict(e) for e in self._events]}
 
 
 class LatencyRecorder:

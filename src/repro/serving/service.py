@@ -18,6 +18,16 @@ Predictions — served alone or coalesced across tenants through
 :class:`~repro.serving.batcher.CoalescingBatcher` — always run through the
 same vmapped batched-posterior function, so a request's results are
 bitwise identical whichever path served it.
+
+Reliability: invalid payloads (non-finite observed values, out-of-grid
+masks — :class:`~repro.core.errors.ObservationError`) and exhausted solver
+escalation (:class:`~repro.core.solvers.guarded.GuardedSolveError`) are
+**quarantined**, never propagated: the offending observation is rejected,
+the session keeps serving from its last good state, and the event lands in
+the service :class:`~repro.serving.metrics.EventLog`. With
+``checkpoint_dir`` set, the session store is periodically snapshotted
+(:mod:`repro.serving.checkpoint`) and :meth:`PredictionService.restore`
+rebuilds warm sessions after a crash.
 """
 from __future__ import annotations
 
@@ -27,10 +37,13 @@ from typing import Sequence
 
 import numpy as np
 
+from ..core.errors import ObservationError
 from ..core.posterior import posterior_batch
+from ..core.solvers.guarded import GuardedSolveError
 from ..core.state import LKGPConfig, LKGPState, extend, fit, fit_batch, refit
 from .batcher import CoalescingBatcher, coalesce_sessions
-from .metrics import Counter, LatencyRecorder
+from .checkpoint import ObservationLog, ServiceCheckpointer
+from .metrics import Counter, EventLog, LatencyRecorder
 from .store import Session, SessionKey, SessionStore
 
 __all__ = ["ServiceConfig", "Prediction", "PredictionService"]
@@ -45,6 +58,9 @@ class ServiceConfig:
     refit_every: int = 4          # warm refit every k-th observe (0 = never)
     refit_lbfgs_iters: int = 5    # L-BFGS budget of a warm refit
     coalesce: bool = True         # allow cross-tenant fit coalescing
+    checkpoint_dir: str | None = None   # None: durability off
+    checkpoint_every: int = 8     # snapshot every k-th accepted observe
+    checkpoint_keep: int = 3      # keep-K checkpoint GC
 
 
 @dataclass(frozen=True)
@@ -68,6 +84,12 @@ class PredictionService:
         self.batcher = CoalescingBatcher(self._execute_group)
         self.predict_latency = LatencyRecorder()
         self.observe_latency = LatencyRecorder()
+        self.events = EventLog()
+        self.obs_log = ObservationLog()
+        self.checkpointer: ServiceCheckpointer | None = None
+        if self.config.checkpoint_dir is not None:
+            self.checkpointer = ServiceCheckpointer(
+                self.config.checkpoint_dir, keep=self.config.checkpoint_keep)
         self.counters = {
             "predicts": Counter(),
             "observes": Counter(),
@@ -76,6 +98,9 @@ class PredictionService:
             "refits": Counter(),
             "coalesced_groups": Counter(),
             "coalesced_requests": Counter(),
+            "quarantined": Counter(),
+            "checkpoints": Counter(),
+            "restores": Counter(),
         }
 
     # -- observation path --------------------------------------------------
@@ -89,33 +114,55 @@ class PredictionService:
         *full updated* ``Y`` / ``mask`` over the same grid (``mask`` a
         superset of what the session has seen) — an ``extend`` plus, every
         ``refit_every``-th time, a warm ``refit``.
+
+        Invalid payloads and exhausted solver escalation are quarantined:
+        the call returns ``action="quarantined"`` (with the error message),
+        the session — if one exists — keeps serving from its last good
+        state, and the event is recorded. Nothing is raised; a misbehaving
+        tenant cannot take the service down.
         """
         start = time.perf_counter()
         key = SessionKey(tenant, task)
         session = self.store.get(key)
-        if session is None:
-            if X is None or t is None:
-                raise KeyError(
-                    f"unknown session {key}: the first observe must "
-                    "include X and t for the cold fit")
-            state = fit(X, t, Y, mask, self.config.gp)
-            session = self.store.put(key, state)
-            action = "fit"
-            self.counters["cold_fits"].inc()
-        else:
-            with session.lock:
-                state = extend(session.state, Y, mask)
-                session.observes += 1
-                action = "extend"
-                self.counters["extends"].inc()
-                every = self.config.refit_every
-                if every > 0 and session.observes % every == 0:
-                    state = refit(
-                        state, lbfgs_iters=self.config.refit_lbfgs_iters)
-                    action = "extend+refit"
-                    self.counters["refits"].inc()
-                session.swap_state(state)
+        try:
+            if session is None:
+                if X is None or t is None:
+                    raise KeyError(
+                        f"unknown session {key}: the first observe must "
+                        "include X and t for the cold fit")
+                state = fit(X, t, Y, mask, self.config.gp)
+                session = self.store.put(key, state)
+                action = "fit"
+                self.counters["cold_fits"].inc()
+            else:
+                with session.lock:
+                    # Build the candidate state FULLY before touching any
+                    # session field: an ObservationError / exhausted
+                    # escalation below leaves the session exactly as it
+                    # was (last good state keeps serving).
+                    state = extend(session.state, Y, mask)
+                    session.observes += 1
+                    action = "extend"
+                    self.counters["extends"].inc()
+                    every = self.config.refit_every
+                    if every > 0 and session.observes % every == 0:
+                        state = refit(
+                            state, lbfgs_iters=self.config.refit_lbfgs_iters)
+                        action = "extend+refit"
+                        self.counters["refits"].inc()
+                    session.swap_state(state)
+        except (ObservationError, GuardedSolveError) as e:
+            self.counters["quarantined"].inc()
+            self.events.record(
+                "quarantine", tenant=tenant, task=task,
+                error=type(e).__name__, detail=str(e))
+            self.observe_latency.record(time.perf_counter() - start)
+            return {"tenant": tenant, "task": task, "action": "quarantined",
+                    "error": str(e),
+                    "generation": session.generation if session else -1}
         self.counters["observes"].inc()
+        self.obs_log.append(tenant, task, action)
+        self._maybe_checkpoint()
         self.observe_latency.record(time.perf_counter() - start)
         return {"tenant": tenant, "task": task, "action": action,
                 "generation": session.generation}
@@ -155,7 +202,15 @@ class PredictionService:
             t = np.stack([np.asarray(r["t"]) for r in group])
             Y = np.stack([np.asarray(r["Y"]) for r in group])
             mask = np.stack([np.asarray(r["mask"]) for r in group])
-            batched = fit_batch(X, t, Y, mask, self.config.gp)
+            try:
+                batched = fit_batch(X, t, Y, mask, self.config.gp)
+            except ObservationError:
+                # One poisoned payload must not sink the whole coalesced
+                # group: fall back to per-request observes, which fit the
+                # healthy ones and quarantine the offender individually.
+                for i in indices:
+                    out[i] = self.observe(**requests[i])
+                continue
             from ..core.state import unstack
             states = unstack(batched)
             self.counters["coalesced_groups"].inc()
@@ -166,11 +221,61 @@ class PredictionService:
                 session = self.store.put(key, state)
                 self.counters["cold_fits"].inc()
                 self.counters["observes"].inc()
+                self.obs_log.append(req["tenant"], req["task"], "fit_batch")
                 out[i] = {"tenant": req["tenant"], "task": req["task"],
                           "action": "fit_batch",
                           "generation": session.generation}
+            self._maybe_checkpoint()
             self.observe_latency.record(time.perf_counter() - start)
         return [r for r in out if r is not None]
+
+    # -- durability --------------------------------------------------------
+    def _maybe_checkpoint(self) -> None:
+        every = self.config.checkpoint_every
+        if (self.checkpointer is not None and every > 0
+                and self.counters["observes"].value % every == 0):
+            self.checkpoint()
+
+    def checkpoint(self) -> int | None:
+        """Snapshot every resident session (+ observation log) durably.
+
+        Returns the checkpoint step, or None when durability is off
+        (``checkpoint_dir`` unset). Sessions are snapshotted under their
+        own locks; the write is atomic (temp dir + rename).
+        """
+        if self.checkpointer is None:
+            return None
+        step = self.checkpointer.save(list(self.store.sessions()),
+                                      self.obs_log)
+        self.counters["checkpoints"].inc()
+        self.events.record("checkpoint", step=step, sessions=len(self.store))
+        return step
+
+    def restore(self, step: int | None = None) -> int:
+        """Rebuild warm sessions from the latest (or given) checkpoint.
+
+        Reinstalls every checkpointed session into the store with its
+        state, ``generation`` and ``observes`` intact — a restored session
+        serves predictions immediately, bitwise identical to the moment it
+        was snapshotted. Also adopts the checkpointed observation log so
+        sequence numbers keep increasing monotonically across the crash.
+        Returns the number of sessions restored.
+        """
+        if self.checkpointer is None:
+            raise RuntimeError("durability is off: ServiceConfig."
+                               "checkpoint_dir is not set")
+        metas, states, extra = self.checkpointer.load(step)
+        for meta, state in zip(metas, states):
+            key = SessionKey(meta["tenant"], meta["task"])
+            session = self.store.put(key, state)
+            session.generation = int(meta["generation"])
+            session.observes = int(meta["observes"])
+        self.obs_log.load(extra.get("obs_log", []),
+                          extra.get("next_seq", 0))
+        self.counters["restores"].inc()
+        self.events.record("restore", sessions=len(metas),
+                           next_seq=self.obs_log.next_seq)
+        return len(metas)
 
     # -- prediction path ---------------------------------------------------
     def _session(self, tenant: str, task: str) -> Session:
@@ -252,4 +357,5 @@ class PredictionService:
             "predict_latency": self.predict_latency.snapshot(),
             "observe_latency": self.observe_latency.snapshot(),
             "counters": {k: c.value for k, c in self.counters.items()},
+            "events": self.events.snapshot(),
         }

@@ -1,0 +1,16 @@
+"""Test-support utilities shipped with the library.
+
+:mod:`repro.testing.faults` — composable fault injectors (NaN payloads,
+near-singular operators, forced solver breakdown, eviction, crash/restore)
+driving the chaos suite (``tests/test_reliability.py``) and the
+reliability benchmark (``benchmarks/bench_reliability.py``).
+"""
+from .faults import (FaultSchedule, FlakySolver, NegatedOperator,
+                     arm_flaky_solver, crash_and_restore, evict_session,
+                     near_singular_problem, poison_nan)
+
+__all__ = [
+    "NegatedOperator", "FlakySolver", "arm_flaky_solver", "poison_nan",
+    "near_singular_problem", "evict_session", "crash_and_restore",
+    "FaultSchedule",
+]

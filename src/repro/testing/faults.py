@@ -1,0 +1,216 @@
+"""Composable fault injectors for the reliability chaos suite.
+
+Each injector produces exactly ONE kind of failure the reliability layer
+claims to survive, deterministically, so the chaos tests can assert not
+just "nothing crashed" but precisely which detection point fired:
+
+* :class:`NegatedOperator` — wraps an SPD operator as ``u -> -A(u)``:
+  every CG/PCG iteration sees ``p^T A p < 0`` and flags per-column
+  ``breakdown`` (detection: solver diagnostics -> guarded-solve ladder).
+* :class:`FlakySolver` (registry name ``"flaky"``) — an armed solver that
+  returns an instant fake breakdown for the next N calls, then delegates
+  to plain CG. Escalation succeeds on the first ladder rung at roughly
+  the cost of one clean CG solve, which is what the latency-inflation
+  benchmark measures (detection: guarded-solve health check).
+* :func:`poison_nan` — plants NaNs at newly-observed cells of an
+  ``extend`` payload (detection: ``check_observed_finite`` at the
+  streaming boundary -> service quarantine).
+* :func:`near_singular_problem` — duplicated rows + tiny noise make the
+  gram factors near-singular (detection: escalation ladder's jitter
+  retries).
+* :func:`evict_session` — forces an LRU-style eviction mid-workload.
+* :func:`crash_and_restore` — simulated process crash: a FRESH service
+  over the same checkpoint directory, rebuilt via ``restore()``.
+* :class:`FaultSchedule` — maps workload rounds to injector thunks so a
+  whole chaos scenario is one declarative object.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.solvers import (CGResult, StackedSolveResult, get_solver,
+                            register_solver)
+
+__all__ = [
+    "NegatedOperator", "FlakySolver", "arm_flaky_solver", "poison_nan",
+    "near_singular_problem", "evict_session", "crash_and_restore",
+    "FaultSchedule",
+]
+
+
+class NegatedOperator:
+    """``u -> -A(u)``: a maximally indefinite wrapper around an SPD operator.
+
+    Attribute access (mask, Kronecker factors, preconditioner) delegates to
+    the base operator, so solver routing and the guarded dense fallback see
+    the INTENDED model matrix — exactly the situation the fallback exists
+    for: a broken operator realisation over healthy factors.
+    """
+
+    def __init__(self, base: Callable) -> None:
+        self._base = base
+
+    def __call__(self, u: jnp.ndarray) -> jnp.ndarray:
+        return -self._base(u)
+
+    def __getattr__(self, name: str) -> Any:
+        return getattr(self._base, name)
+
+
+def _fake_breakdown(b: jnp.ndarray) -> CGResult:
+    """Instant all-columns-broke result (no operator applications at all)."""
+    sys_shape = b.shape[:-2]
+    return CGResult(
+        x=jnp.zeros_like(b), iters=jnp.int32(0),
+        rel_residual=jnp.ones(sys_shape, b.dtype),
+        breakdown=jnp.ones(sys_shape, bool),
+        col_iters=jnp.zeros(sys_shape, jnp.int32), matvecs=jnp.int32(0))
+
+
+@register_solver("flaky")
+class FlakySolver:
+    """Armed fault: fake breakdown for the next N solves, then plain CG.
+
+    The fake failure costs zero operator sweeps, so an escalated solve
+    through this fault pays ~one clean CG solve plus ladder bookkeeping —
+    the escalated-vs-clean p99 comparison in ``bench_reliability``
+    measures guard overhead, not an artificially slow fault.
+    """
+
+    def __init__(self) -> None:
+        self._armed = 0
+        self._lock = threading.Lock()
+
+    def arm(self, n: int) -> None:
+        with self._lock:
+            self._armed = int(n)
+
+    def _trip(self) -> bool:
+        with self._lock:
+            if self._armed > 0:
+                self._armed -= 1
+                return True
+            return False
+
+    def solve(self, A: Callable, b: jnp.ndarray, config: Any,
+              x0: jnp.ndarray | None = None) -> CGResult:
+        if self._trip():
+            return _fake_breakdown(b)
+        return get_solver("cg").solve(A, b, config, x0=x0)
+
+    def solve_stacked(self, A: Callable, rhs: jnp.ndarray, config: Any, *,
+                      probe_cols: int = 0, subspace_dim: Any = None,
+                      x0: jnp.ndarray | None = None) -> StackedSolveResult:
+        if self._trip():
+            res = _fake_breakdown(rhs)
+            return StackedSolveResult(x=res.x, logdet=None, result=res)
+        return get_solver("cg").solve_stacked(
+            A, rhs, config, probe_cols=probe_cols,
+            subspace_dim=subspace_dim, x0=x0)
+
+
+def arm_flaky_solver(n: int) -> "FlakySolver":
+    """Arm the registered ``"flaky"`` solver singleton for the next N solves."""
+    solver = get_solver("flaky")
+    solver.arm(n)
+    return solver
+
+
+def poison_nan(Y, mask, cells: int = 1):
+    """Extend-payload poisoner: mark ``cells`` new cells observed, value NaN.
+
+    Grows each poisoned row's mask by one cell (stays a superset of the
+    input mask, so only the finiteness guard can be the detector) and puts
+    ``nan`` there. Returns (Y_poisoned, mask_poisoned) as numpy arrays.
+    """
+    Y = np.array(Y, copy=True)
+    mask = np.array(mask, copy=True)
+    planted = 0
+    seen_per_row = mask.sum(axis=1).astype(np.int64)
+    for row in range(mask.shape[0]):
+        if planted >= cells:
+            break
+        seen = seen_per_row[row]
+        if seen < mask.shape[1]:
+            mask[row, seen] = 1.0
+            Y[row, seen] = np.nan
+            planted += 1
+    if planted == 0:
+        raise ValueError("mask is already full; nowhere to plant a NaN")
+    return Y, mask
+
+
+def near_singular_problem(n: int = 8, m: int = 6, d: int = 3,
+                          noise: float = 1e-10, seed: int = 0):
+    """An ill-conditioned LKGP system: duplicated configs + ~zero noise.
+
+    Every config row is (near-)duplicated, so ``K1`` has (near-)repeated
+    columns and the masked system's condition number blows up; the tiny
+    noise removes the diagonal regularisation that normally hides it.
+    Returns ``(K1, K2, mask, Y, noise)`` in the same layout the solver
+    tests use.
+    """
+    import jax
+
+    from ..core.state import gram_matrices, init_params
+
+    key = jax.random.PRNGKey(seed)
+    kx, ky = jax.random.split(key)
+    half = jax.random.uniform(kx, ((n + 1) // 2, d), jnp.float64)
+    X = jnp.concatenate([half, half + 1e-9], axis=0)[:n]
+    t = jnp.linspace(0.05, 1.0, m).astype(jnp.float64)
+    K1, K2 = gram_matrices(init_params(d, jnp.float64), X, t, jitter=0.0)
+    mask = jnp.ones((n, m), jnp.float64)
+    Y = jax.random.normal(ky, (n, m), jnp.float64)
+    return K1, K2, mask, Y, jnp.float64(noise)
+
+
+def evict_session(service, tenant: str, task: str) -> bool:
+    """Mid-workload eviction: drop a session from the store (LRU-style)."""
+    from ..serving.store import SessionKey
+
+    return service.store.drop(SessionKey(tenant, task))
+
+
+def crash_and_restore(service, step: int | None = None):
+    """Simulated crash: fresh service over the same checkpoint directory.
+
+    The old service object is abandoned exactly as a killed process would
+    abandon its memory; the replacement rebuilds warm sessions via
+    ``restore()``. Returns ``(new_service, sessions_restored)``.
+    """
+    from ..serving.service import PredictionService
+
+    if service.checkpointer is None:
+        raise RuntimeError("service has no checkpoint_dir; nothing to "
+                           "restore a crash from")
+    replacement = PredictionService(service.config)
+    restored = replacement.restore(step)
+    return replacement, restored
+
+
+class FaultSchedule:
+    """Declarative round -> injectors mapping for chaos scenarios.
+
+    ``add(round, fn)`` registers an injector thunk; ``fire(round, **ctx)``
+    runs every injector registered for that round (in registration order)
+    and returns their results. Injectors receive the context kwargs the
+    driver passes (e.g. ``service=...``).
+    """
+
+    def __init__(self) -> None:
+        self._by_round: dict[int, list[Callable]] = {}
+
+    def add(self, round_idx: int, injector: Callable) -> "FaultSchedule":
+        self._by_round.setdefault(int(round_idx), []).append(injector)
+        return self
+
+    def rounds(self) -> list[int]:
+        return sorted(self._by_round)
+
+    def fire(self, round_idx: int, **ctx: Any) -> list:
+        return [fn(**ctx) for fn in self._by_round.get(int(round_idx), [])]

@@ -257,7 +257,7 @@ def test_metrics_shape():
     svc.predict("t0", "run")
     m = svc.metrics()
     assert set(m) == {"store", "predict_latency", "observe_latency",
-                      "counters"}
+                      "counters", "events"}
     assert m["counters"]["predicts"] == 1
     assert m["counters"]["observes"] == 2
     assert m["predict_latency"]["count"] == 1
