@@ -20,6 +20,15 @@ Four sections, all written to ``BENCH_automl.json``:
 * ``acceptance`` — the two headline claims as booleans so CI can gate on
   them: SH-lkgp beats SH-rank at equal budget, and ``precond_rank > 0``
   reduces CG iterations on at least one size.
+* ``amortized`` (``--amortized``) — the amortized-hyper-parameter suite:
+  per-task MLL gap of the :mod:`repro.amortize` one-shot init vs a
+  converged L-BFGS fit, a per-round refit wall-clock breakdown (MLL-opt
+  time vs posterior-solve time) across full-LBFGS / amortized-oneshot /
+  amortized+polish, and an SH-lkgp regret race of the three strategies.
+  Adds gated acceptance booleans: amortized+polish cuts mean refit
+  wall-clock >= 3x at equal-or-better regret (within tolerance), the
+  amortized init's MLL is within tolerance of the converged optimum, and
+  it beats the prior-mean default init.
 
 With ``--dataset lcbench:<path>`` the scheduler races replay the tasks of
 an LCBench/ifBO-format artifact instead of sampling the synthetic prior:
@@ -39,6 +48,7 @@ import argparse
 import json
 import platform
 import time
+from dataclasses import replace
 
 import jax
 
@@ -288,6 +298,204 @@ def bench_batched(num_tasks, n, m, d=5, out=print):
 
 
 # --------------------------------------------------------------------------
+# amortized-hyper-parameter section (--amortized)
+# --------------------------------------------------------------------------
+def _amortized_strategies(gp: LKGPConfig):
+    """The three fit strategies the suite races (shared base config).
+
+    ``full-lbfgs`` refits with the host L-BFGS at its full default budget
+    (``gp.lbfgs_iters`` per round); the amortized arms replace it with the
+    fixed-budget device polish, so the race measures the actual swap a
+    scheduler makes when it opts into ``hyper_init="amortized"``.
+    """
+    return [
+        ("full-lbfgs", gp),
+        ("amortized-oneshot",
+         replace(gp, hyper_init="amortized", polish_steps=0)),
+        ("amortized-polish",
+         replace(gp, hyper_init="amortized", polish_steps=2)),
+    ]
+
+
+def bench_amortized_mll(seeds, n, m, d, out=print):
+    """Per-task MLL-objective gap of each init vs a converged L-BFGS fit.
+
+    ``gap_*`` is the per-observation penalised negative MLL above the
+    converged optimum (lower = closer); ``gap_default`` is the prior-mean
+    init the amortizer must beat for the warm start to be worth anything.
+    """
+    rows = []
+    for seed in seeds:
+        task = sample_task(seed=900 + seed, n=n, m=m, d=d, noise=0.005,
+                           crossing=True)
+        args = (task.X, task.t, task.Y, task.mask)
+        conv = fit(*args, LKGPConfig(lbfgs_iters=60)).fit_result.fun
+        one = fit(*args, LKGPConfig(hyper_init="amortized",
+                                    polish_steps=0)).fit_result.fun
+        dflt = fit(*args, LKGPConfig(polish_steps=0)).fit_result.fun
+        pol = fit(*args, LKGPConfig(hyper_init="amortized",
+                                    polish_steps=2)).fit_result.fun
+        rows.append({
+            "seed": seed, "n": n, "m": m,
+            "fun_converged": round(float(conv), 5),
+            "gap_amortized": round(float(one - conv), 5),
+            "gap_default": round(float(dflt - conv), 5),
+            "gap_polished": round(float(pol - conv), 5),
+        })
+        out(f"amortized-mll,seed={seed},conv={rows[-1]['fun_converged']},"
+            f"gap_amortized={rows[-1]['gap_amortized']},"
+            f"gap_default={rows[-1]['gap_default']},"
+            f"gap_polished={rows[-1]['gap_polished']}")
+    return rows
+
+
+def bench_amortized_refit(strategies, seeds, n, m, d, out=print):
+    """Per-round refit wall-clock breakdown for each fit strategy.
+
+    Replays the predictor loop a scheduler runs — reveal one epoch column,
+    ``extend`` + ``refit`` (MLL optimisation), then read the final-epoch
+    posterior (solve) — and times the two phases separately. The first
+    round (cold fit + compile) is reported as ``cold_s`` and excluded
+    from the per-round means.
+    """
+    from repro.autotune import CurvePredictor
+
+    rows = []
+    for name, gp in strategies:
+        refit_s, solve_s, cold = [], [], None
+        for seed in seeds:
+            task = sample_task(seed=900 + seed, n=n, m=m, d=d, noise=0.005,
+                               crossing=True)
+            # full default refit budget (gp.lbfgs_iters); the polish
+            # strategies ignore it — gp.polish_steps >= 0 takes over
+            pred = CurvePredictor(task.X, gp=gp, t=task.t,
+                                  refit_lbfgs_iters=None)
+            Y = task.Y_full
+            for k in range(2, m + 1):
+                maskk = np.zeros((n, m))
+                maskk[:, :k] = 1.0
+                t0 = time.perf_counter()
+                pred.update(Y, maskk)
+                t1 = time.perf_counter()
+                pred.predict_final()
+                jax.block_until_ready(0)
+                t2 = time.perf_counter()
+                if k == 2:
+                    cold = t1 - t0 if cold is None else cold
+                else:
+                    refit_s.append(t1 - t0)
+                    solve_s.append(t2 - t1)
+        row = {
+            "strategy": name, "n": n, "m": m,
+            "rounds": len(refit_s),
+            "cold_s": round(float(cold), 4),
+            "mean_refit_ms": round(float(np.mean(refit_s)) * 1e3, 3),
+            "p90_refit_ms": round(float(np.quantile(refit_s, 0.9)) * 1e3, 3),
+            "mean_solve_ms": round(float(np.mean(solve_s)) * 1e3, 3),
+        }
+        rows.append(row)
+        out(f"amortized-refit,{name},mean_refit_ms={row['mean_refit_ms']},"
+            f"mean_solve_ms={row['mean_solve_ms']},cold_s={row['cold_s']}")
+    return rows
+
+
+def bench_amortized_regret(strategies, suite, seeds, out=print):
+    """SH-lkgp regret + wall-clock raced across the three fit strategies.
+
+    Identical task, history, rung schedule, and observation stream per
+    seed — only the hyper-parameter optimisation strategy differs, so
+    regret deltas measure init/polish quality and wall-clock deltas the
+    refit cost.
+    """
+    rows = []
+    for seed in seeds:
+        task = sample_task(seed=suite["task_seed"] + seed, n=suite["n"],
+                           m=suite["m"], d=suite["d"], noise=0.005,
+                           diverge_prob=suite["diverge_prob"],
+                           spike_prob=0.0, crossing=True)
+        n, m = task.Y_full.shape
+        rng = np.random.default_rng(seed)
+        hist = rng.choice(n, suite["n_hist"], replace=False)
+        fresh = np.setdiff1d(np.arange(n), hist).tolist()
+        true_final = task.Y_full[:, -1]
+        best = float(true_final[fresh].max())
+        for name, gp in strategies:
+            sched = SuccessiveHalvingScheduler(
+                task.X,
+                noisy_step_fns(task, 7000 + seed, suite["obs_noise"],
+                               suite["spike_prob"]),
+                SHConfig(promotion="lkgp", max_epochs=m,
+                         min_epochs=suite["min_epochs"], eta=3, gp=gp,
+                         ucb_beta=0.0, refit_lbfgs_iters=None), seed=seed,
+                t=task.t)
+            for i in hist:
+                sched.pool.advance_to(i, m, charge=False)
+            t0 = time.time()
+            summary = sched.run(subset=fresh)
+            wall = time.time() - t0
+            sel = summary["selected"]
+            rows.append({
+                "strategy": name, "seed": seed,
+                "epochs_spent": int(summary["epochs_spent"]),
+                "regret": round(float(best - true_final[sel]), 5),
+                "wall_s": round(wall, 3),
+            })
+            out(f"amortized-regret,{name},{seed},"
+                f"{rows[-1]['epochs_spent']},{rows[-1]['regret']},"
+                f"{rows[-1]['wall_s']}")
+    return rows
+
+
+def bench_amortized(quick: bool, seeds, gp: LKGPConfig, suite: dict,
+                    out=print):
+    """The full amortized suite + its gated acceptance booleans."""
+    strategies = _amortized_strategies(gp)
+    n, m, d = suite["n"], suite["m"], suite["d"]
+    mll_rows = bench_amortized_mll(seeds, n=n, m=m, d=d, out=out)
+    refit_rows = bench_amortized_refit(strategies, seeds, n=n, m=m, d=d,
+                                       out=out)
+    regret_rows = bench_amortized_regret(strategies, suite, seeds, out=out)
+
+    refit_ms = {r["strategy"]: r["mean_refit_ms"] for r in refit_rows}
+    solve_ms = {r["strategy"]: r["mean_solve_ms"] for r in refit_rows}
+    speedup = refit_ms["full-lbfgs"] / max(refit_ms["amortized-polish"], 1e-9)
+
+    def mean_regret(name):
+        rs = [r["regret"] for r in regret_rows if r["strategy"] == name]
+        return round(float(np.mean(rs)), 5)
+
+    regret = {name: mean_regret(name) for name, _ in strategies}
+    gap_amortized = float(np.mean([r["gap_amortized"] for r in mll_rows]))
+    gap_default = float(np.mean([r["gap_default"] for r in mll_rows]))
+
+    # Tolerances: regret is in [0, 1] metric units (0.02 is far below the
+    # seed-to-seed spread); the MLL gap is per-observation penalised NLL
+    # units, where the default init sits ~0.2+ above the optimum.
+    regret_tol = 0.02
+    mll_tol = 0.15
+    acceptance = {
+        "amortized_polish_refit_speedup_3x": bool(speedup >= 3.0),
+        "amortized_polish_regret_ok": bool(
+            regret["amortized-polish"]
+            <= regret["full-lbfgs"] + regret_tol),
+        "amortized_mll_within_tol": bool(gap_amortized <= mll_tol),
+        "amortized_beats_default_init": bool(gap_amortized < gap_default),
+    }
+    summary = {
+        "refit_speedup": round(float(speedup), 2),
+        "mean_refit_ms": refit_ms,
+        "mean_solve_ms": solve_ms,
+        "mean_regret": regret,
+        "mean_mll_gap": {"amortized": round(gap_amortized, 5),
+                         "default": round(gap_default, 5)},
+        "regret_tol": regret_tol, "mll_tol": mll_tol,
+    }
+    out(f"# amortized summary: {summary}")
+    return {"mll_gap": mll_rows, "refit_race": refit_rows,
+            "regret_race": regret_rows, "summary": summary}, acceptance
+
+
+# --------------------------------------------------------------------------
 # main
 # --------------------------------------------------------------------------
 def dataset_suites(src, quick: bool, out=print):
@@ -342,7 +550,7 @@ def suites_grid(quick: bool):
 
 
 def main(quick: bool = False, seeds=None, out_path: str = "BENCH_automl.json",
-         out=print, dataset: str | None = None):
+         out=print, dataset: str | None = None, amortized: bool = False):
     gp = LKGPConfig(lbfgs_iters=20, posterior_samples=64, slq_probes=8,
                     slq_iters=15)
     if seeds is None:
@@ -373,6 +581,15 @@ def main(quick: bool = False, seeds=None, out_path: str = "BENCH_automl.json",
                                 n=6 if quick else 8,
                                 m=8 if quick else 10, out=out)
 
+    amortized_section, amortized_acceptance = None, {}
+    if amortized:
+        # The suite needs the synthetic prior (the packaged amortizer is
+        # trained on it) at the d=5 grid the quick suite already uses.
+        am_suite = suites_grid(True)[0] if (dataset or not quick) \
+            else suites[0]
+        amortized_section, amortized_acceptance = bench_amortized(
+            quick, seeds, gp, am_suite, out=out)
+
     # headline aggregates + acceptance
     def agg(name):
         rs = [r["regret"] for r in sched_rows if r["scheduler"] == name]
@@ -396,6 +613,7 @@ def main(quick: bool = False, seeds=None, out_path: str = "BENCH_automl.json",
                                    and mean_regret["sh-lkgp"]
                                    < mean_regret["sh-rank"]),
         "precond_reduces_cg_iters": bool(precond_ok),
+        **amortized_acceptance,
     }
     out(f"# mean regret: {mean_regret}")
     out(f"# acceptance: {acceptance}")
@@ -416,6 +634,8 @@ def main(quick: bool = False, seeds=None, out_path: str = "BENCH_automl.json",
         "batched": batched_row,
         "acceptance": acceptance,
     }
+    if amortized_section is not None:
+        payload["amortized"] = amortized_section
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
     out(f"# wrote {out_path}")
@@ -431,5 +651,13 @@ if __name__ == "__main__":
                     help="curve source spec, e.g. "
                          "lcbench:tests/fixtures/lcbench_mini.npz "
                          "(default: the synthetic prior grid)")
+    ap.add_argument("--amortized", action="store_true",
+                    help="also run the amortized-hyper-parameter suite: "
+                         "MLL-gap vs converged L-BFGS, per-round refit "
+                         "wall-clock breakdown, and the regret race of "
+                         "full-LBFGS vs amortized-oneshot vs "
+                         "amortized+polish (adds gated acceptance "
+                         "booleans)")
     args = ap.parse_args()
-    main(quick=args.quick, out_path=args.out, dataset=args.dataset)
+    main(quick=args.quick, out_path=args.out, dataset=args.dataset,
+         amortized=args.amortized)

@@ -12,9 +12,13 @@ Fails (exit 1) when
 * any backend's ``mll_eval_ms`` / ``posterior_mean_ms`` at a matching
   (backend, n, m) cell regresses more than ``--factor`` against the
   committed ``BENCH_baseline.json``, or
-* either headline acceptance claim measured by ``bench_automl`` is false
-  (LKGP-ranked SH beats rank-based at equal budget; ``precond_rank > 0``
-  reduces CG iterations), or
+* any acceptance claim measured by ``bench_automl`` is false — the two
+  headline scheduler claims (LKGP-ranked SH beats rank-based at equal
+  budget; ``precond_rank > 0`` reduces CG iterations) plus, when the run
+  carries the ``--amortized`` suite, the amortized-hyper-parameter claims
+  (amortized+polish cuts mean refit wall-clock >= 3x at equal-or-better
+  regret within tolerance; the amortized init's MLL stays within
+  tolerance of a converged fit and beats the default init), or
 * any acceptance claim measured by ``bench_curve_pred`` is false (the LKGP
   stays within the paper's "matches a Transformer" tolerance on NLL / MAE /
   final-value rank correlation, on identical held-out suites), or
@@ -165,6 +169,21 @@ def check(baseline: dict, backends: dict | None, automl: dict | None,
             print(f"info      automl [{_dataset(automl)}] {sched}: "
                   f"mean regret {regret}"
                   + (f" (baseline {base_r})" if base_r is not None else ""))
+        am = automl.get("amortized", {}).get("summary")
+        if am:
+            base_am = (baseline.get("automl", {}).get("amortized", {})
+                       .get("summary", {}) if gate else {})
+            base_sp = base_am.get("refit_speedup")
+            print(f"info      automl [{_dataset(automl)}] amortized: "
+                  f"refit speedup {am['refit_speedup']}x "
+                  f"(mll gap {am['mean_mll_gap']['amortized']})"
+                  + (f" (baseline speedup {base_sp}x)"
+                     if base_sp is not None else ""))
+            for strat, ms in am.get("mean_refit_ms", {}).items():
+                print(f"info      automl [{_dataset(automl)}] amortized "
+                      f"{strat}: refit {ms} ms, "
+                      f"solve {am['mean_solve_ms'].get(strat)} ms, "
+                      f"regret {am['mean_regret'].get(strat)}")
 
     if curvepred is not None:
         gate = _check_acceptance("curve_pred", curvepred,

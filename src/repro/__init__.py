@@ -11,6 +11,7 @@ Layout:
   repro.checkpoint  — fault-tolerant checkpoint manager
   repro.autotune    — LKGP-driven early-stopping scheduler
   repro.baselines   — amortized transformer baseline + head-to-head eval
+  repro.amortize    — hyper-parameter amortizer (warm starts for fit/refit)
   repro.launch      — production meshes, multi-pod dry-run, roofline
 """
 __version__ = "1.0.0"

@@ -1,0 +1,28 @@
+"""Amortized hyper-parameter initialisation for the LKGP.
+
+A set encoder (:mod:`~repro.amortize.encoder`, built from the curve
+transformer's shared blocks) maps a masked task straight to the LKGP's
+unconstrained parameter vector; ``fit(init="amortized")`` starts there
+and needs only a fixed-budget device polish (:mod:`repro.core.polish`)
+instead of a full host L-BFGS. Training
+(:mod:`~repro.amortize.train`) is self-supervised on synthetic task
+streams with the fit objective itself as the loss — no ground-truth
+hyper-parameters anywhere. A pretrained mini-amortizer ships as a
+packaged fixture (``fixtures/amortizer_d5.npz``; regenerate with
+``python -m repro.amortize.make_fixture``) and is what
+``LKGPConfig(hyper_init="amortized")`` resolves to by default.
+"""
+from .encoder import (FIXTURE_DIR, Amortizer, AmortizerConfig,
+                      clear_amortizer_registry, forward, get_amortizer,
+                      init_amortizer, param_table, register_amortizer)
+from .train import (AmortizeTrainConfig, AmortizerModel,
+                    build_amortizer_model, sample_amortize_batch,
+                    train_amortizer)
+
+__all__ = [
+    "Amortizer", "AmortizerConfig", "FIXTURE_DIR", "forward",
+    "get_amortizer", "register_amortizer", "clear_amortizer_registry",
+    "init_amortizer", "param_table",
+    "AmortizeTrainConfig", "AmortizerModel", "build_amortizer_model",
+    "sample_amortize_batch", "train_amortizer",
+]

@@ -1,0 +1,263 @@
+"""Hyper-parameter amortizer: a set encoder from curves to LKGP params.
+
+The encoder maps a whole masked task — hyper-parameter vectors ``X``
+(n, d), progression grid ``t`` (m,), observed curves ``Y`` / ``mask``
+(n, m) — directly to the LKGP's unconstrained parameter vector
+(d ARD log-lengthscales, t log-lengthscale, log-outputscale, log-noise),
+so a fit can start from a data-dependent point instead of the prior mean
+and finish with a handful of polish steps (:mod:`repro.core.polish`)
+rather than a full host L-BFGS.
+
+Architecture — deliberately the curve transformer re-used twice:
+
+1. **curve stage**: each curve becomes ``m`` epoch tokens
+   (:func:`repro.baselines.curve_transformer.encode_features`) plus a
+   conditioning token embedding its hyper-parameter vector, run through
+   the shared bidirectional encoder blocks
+   (:func:`~repro.baselines.curve_transformer.transformer_stack`); the
+   conditioning token's output summarises the curve;
+2. **set stage**: the ``n`` curve summaries attend to each other through
+   a second (smaller) stack of the same blocks — cross-curve structure
+   like crossing/divergence is what determines good lengthscales — and
+   are mean-pooled;
+3. **head**: a gelu MLP decodes a bounded *delta* around the prior-mean
+   init: ``base + delta_scale * tanh(delta / delta_scale)``. The last
+   head weight is zero-initialised, so an untrained amortizer predicts
+   exactly :func:`repro.core.state.init_params` — training can only
+   improve on the default init, never start worse.
+
+The encoder consumes the *transformed* view of the data (the same
+``Xn / tn / Yn / mask`` the MLL objective sees), which is what
+``fit(init="amortized")`` passes it — no second normalisation scheme.
+
+Batch invariance: :meth:`Amortizer.init_batch` dispatches the ONE
+compiled single-task forward once per task rather than vmapping, so the
+amortized init used by a coalesced ``fit_batch`` is bitwise identical to
+the one a single-task ``fit`` computes (same policy, same reason, as the
+polish in :mod:`repro.core.state`).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..baselines.curve_transformer import (CurveTransformerConfig,
+                                           encode_features, layer_table,
+                                           transformer_stack)
+from ..baselines.curve_transformer import param_table as curve_param_table
+from ..core.state import (LKGPParams, _flatten_params, _unflatten_params,
+                          init_params)
+from ..models.layers import rms_norm
+from ..models.transformer import build_params
+
+__all__ = ["AmortizerConfig", "Amortizer", "param_table", "init_amortizer",
+           "forward", "get_amortizer", "register_amortizer",
+           "clear_amortizer_registry", "FIXTURE_DIR"]
+
+FIXTURE_DIR = Path(__file__).resolve().parent / "fixtures"
+
+
+@dataclass(frozen=True)
+class AmortizerConfig:
+    """Shape configuration; ``d`` is the hyper-parameter dimension."""
+    d: int = 5
+    d_model: int = 32
+    curve_layers: int = 2      # per-curve encoder depth
+    set_layers: int = 1        # cross-curve encoder depth
+    num_heads: int = 4
+    d_ff: int = 64
+    mlp_act: str = "swiglu"
+    norm_eps: float = 1e-6
+    fourier_feats: int = 4
+    delta_scale: float = 3.0   # bound on |predicted - default| per coordinate
+    dtype: Any = jnp.float32
+
+    @property
+    def n_out(self) -> int:
+        """Flat unconstrained LKGP parameter count (see ``LKGPParams``)."""
+        return self.d + 3
+
+    def curve_cfg(self) -> CurveTransformerConfig:
+        """The curve-transformer view of this config (shared blocks)."""
+        return CurveTransformerConfig(
+            d_in=self.d, d_model=self.d_model, num_layers=self.curve_layers,
+            num_heads=self.num_heads, d_ff=self.d_ff, mlp_act=self.mlp_act,
+            norm_eps=self.norm_eps, fourier_feats=self.fourier_feats,
+            dtype=self.dtype)
+
+
+# --------------------------------------------------------------------------
+# parameter table / init
+# --------------------------------------------------------------------------
+def param_table(cfg: AmortizerConfig):
+    """Curve-transformer table minus its Gaussian head, plus set stage + head.
+
+    ``set_final_norm`` ends with ``final_norm`` on purpose: the zoo's
+    :func:`repro.models.transformer.build_params` zero-initialises norm
+    scales by name suffix.
+    """
+    ccfg = cfg.curve_cfg()
+    D = cfg.d_model
+    table = {k: v for k, v in curve_param_table(ccfg).items()
+             if not k.startswith("head/")}
+    for k, (shape, logical, fan) in layer_table(ccfg).items():
+        table[f"set_layers/{k}"] = ((cfg.set_layers, *shape),
+                                    ("layers", *logical), fan)
+    table["set_final_norm"] = ((D,), ("embed",), None)
+    table["head/w0"] = ((D, D), ("embed", None), D)
+    table["head/b0"] = ((D,), (None,), None)
+    table["head/w1"] = ((D, cfg.n_out), ("embed", None), D)
+    return table
+
+
+def init_amortizer(key, cfg: AmortizerConfig):
+    """Fresh parameters; the last head weight is zeroed so the untrained
+    encoder predicts exactly the prior-mean default init (identity start).
+    """
+    p = build_params(key, param_table(cfg), cfg.dtype)
+    p["head"]["w1"] = jnp.zeros_like(p["head"]["w1"])
+    return p
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+def forward(params, Xn, tn, Yn, mask, cfg: AmortizerConfig):
+    """One task -> flat unconstrained LKGP parameter vector (d + 3,).
+
+    ``Xn`` (n, d), ``tn`` (m,), ``Yn`` / ``mask`` (n, m) are the
+    TRANSFORMED training data (unit-cube configs, [0, 1] progressions,
+    normalised curves) — exactly what the MLL objective consumes.
+    """
+    ccfg = cfg.curve_cfg()
+    dt = ccfg.dtype
+    x = encode_features(Yn.astype(dt), mask.astype(dt), tn.astype(dt), ccfg)
+    x = x @ params["in_proj"]["w"] + params["in_proj"]["b"]
+    h0 = jax.nn.gelu(Xn.astype(dt) @ params["hp_embed"]["w0"]
+                     + params["hp_embed"]["b0"])
+    h0 = h0 @ params["hp_embed"]["w1"]
+    x = jnp.concatenate([h0[:, None, :], x], axis=1)       # (n, m + 1, D)
+    x = transformer_stack(x, params["layers"], ccfg)
+    e = rms_norm(x, params["final_norm"], ccfg.norm_eps)[:, 0, :]  # (n, D)
+    s = transformer_stack(e[None], params["set_layers"], ccfg)[0]
+    s = rms_norm(s, params["set_final_norm"], ccfg.norm_eps)
+    pooled = jnp.mean(s, axis=0)
+    h = jax.nn.gelu(pooled @ params["head"]["w0"] + params["head"]["b0"])
+    delta = h @ params["head"]["w1"]
+    base = _flatten_params(init_params(cfg.d, delta.dtype))
+    scale = jnp.asarray(cfg.delta_scale, delta.dtype)
+    return base + scale * jnp.tanh(delta / scale)
+
+
+# --------------------------------------------------------------------------
+# the user-facing artifact
+# --------------------------------------------------------------------------
+class Amortizer:
+    """A (pre)trained amortizer bound to one compiled forward program."""
+
+    def __init__(self, cfg: AmortizerConfig, params):
+        self.cfg = cfg
+        self.params = params
+        self._fwd = jax.jit(
+            lambda p, Xn, tn, Yn, mask: forward(p, Xn, tn, Yn, mask, cfg))
+
+    def init_flat(self, Xn, tn, Yn, mask) -> jnp.ndarray:
+        """Predicted flat unconstrained parameter vector for one task."""
+        return self._fwd(self.params, jnp.asarray(Xn), jnp.asarray(tn),
+                         jnp.asarray(Yn), jnp.asarray(mask))
+
+    def init_for(self, Xn, tn, Yn, mask) -> LKGPParams:
+        """Predicted :class:`LKGPParams` for one (transformed) task."""
+        return _unflatten_params(self.init_flat(Xn, tn, Yn, mask), self.cfg.d)
+
+    def init_batch(self, Xn, tn, Yn, mask) -> LKGPParams:
+        """Per-task predictions for a (B, ...) stack, leading axis B.
+
+        Dispatches the single-task program once per task (NOT vmap) so
+        every row is bitwise identical to :meth:`init_for` on that task —
+        the invariant ``fit_batch`` relies on (see module docstring).
+        """
+        B = Xn.shape[0]
+        flats = jnp.stack([self.init_flat(Xn[i], tn[i], Yn[i], mask[i])
+                           for i in range(B)])
+        return jax.vmap(lambda f: _unflatten_params(f, self.cfg.d))(flats)
+
+    # ---- persistence -----------------------------------------------------
+    def save(self, path) -> None:
+        """Write a self-describing ``.npz`` (config json + flat param paths)."""
+        flat = _flatten_tree(self.params)
+        cfg = asdict(self.cfg)
+        cfg["dtype"] = jnp.dtype(cfg["dtype"]).name
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        np.savez(path, __cfg__=np.asarray(json.dumps(cfg)),
+                 **{k: np.asarray(v) for k, v in flat.items()})
+
+    @classmethod
+    def load(cls, path) -> "Amortizer":
+        with np.load(path) as z:
+            cfg_d = json.loads(str(z["__cfg__"]))
+            cfg_d["dtype"] = jnp.dtype(cfg_d["dtype"])
+            cfg = AmortizerConfig(**cfg_d)
+            params = _nest_tree({k: jnp.asarray(z[k], cfg.dtype)
+                                 for k in z.files if k != "__cfg__"})
+        return cls(cfg, params)
+
+
+def _flatten_tree(tree, prefix: str = ""):
+    out = {}
+    for k in sorted(tree):
+        v = tree[k]
+        if isinstance(v, dict):
+            out.update(_flatten_tree(v, f"{prefix}{k}/"))
+        else:
+            out[f"{prefix}{k}"] = v
+    return out
+
+
+def _nest_tree(flat):
+    out: dict = {}
+    for path, v in flat.items():
+        node = out
+        *parents, leaf = path.split("/")
+        for p in parents:
+            node = node.setdefault(p, {})
+        node[leaf] = v
+    return out
+
+
+# --------------------------------------------------------------------------
+# registry: fit(init="amortized") resolves through here
+# --------------------------------------------------------------------------
+_REGISTRY: dict[int, Amortizer] = {}
+
+
+def register_amortizer(am: Amortizer) -> Amortizer:
+    """Make ``am`` the process-wide amortizer for its ``d``; returns it."""
+    _REGISTRY[am.cfg.d] = am
+    return am
+
+
+def clear_amortizer_registry() -> None:
+    _REGISTRY.clear()
+
+
+def get_amortizer(d: int) -> Amortizer:
+    """The registered amortizer for ``d``, lazily falling back to the
+    packaged pretrained fixture (``fixtures/amortizer_d{d}.npz``)."""
+    am = _REGISTRY.get(d)
+    if am is None:
+        path = FIXTURE_DIR / f"amortizer_d{d}.npz"
+        if not path.exists():
+            raise ValueError(
+                f"no amortizer registered for d={d} and no packaged fixture "
+                f"at {path}; train one with repro.amortize.train_amortizer "
+                "and register_amortizer(...), or pass amortizer= explicitly")
+        am = register_amortizer(Amortizer.load(path))
+    return am

@@ -1,0 +1,38 @@
+"""Regenerate the packaged pretrained mini-amortizer fixture.
+
+Run from the repo root::
+
+    PYTHONPATH=src python -m repro.amortize.make_fixture [--steps N] [--out P]
+
+Trains the default d=5 mini-amortizer (the configuration the benchmarks
+and the serving layer resolve via ``get_amortizer(5)``) and writes it to
+``src/repro/amortize/fixtures/amortizer_d5.npz``. Deterministic given
+the seed, but retraining on a different BLAS/hardware stack can shift
+weights in the last ulp — commit the regenerated file together with any
+encoder change so the fixture always matches the architecture.
+"""
+from __future__ import annotations
+
+import argparse
+
+from .encoder import FIXTURE_DIR, AmortizerConfig
+from .train import AmortizeTrainConfig, train_amortizer
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args(argv)
+
+    acfg = AmortizerConfig()       # d=5 mini config — keep in sync with docs
+    tcfg = AmortizeTrainConfig(steps=args.steps, seed=args.seed)
+    am, info = train_amortizer(acfg, tcfg)
+    out = args.out or (FIXTURE_DIR / f"amortizer_d{acfg.d}.npz")
+    am.save(out)
+    print(f"saved {out}  ({info})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""Self-supervised amortizer training on synthetic task streams.
+
+The loss needs NO ground-truth hyper-parameters: for every sampled task
+the encoder predicts LKGP parameters and is scored by the SAME
+per-observation negative penalised marginal likelihood ``fit`` optimises
+— ``-(MLL + log prior) / n_obs`` through the exact Cholesky MLL. Driving
+the MLL down is exactly what makes the prediction a good warm start, so
+the training signal and the downstream use are the same quantity.
+
+Every step draws a fresh batch of tasks from the LCBench-like prior
+(:func:`repro.data.curves.sample_suite`) with randomized regimes (noise,
+spikes, divergence, crossing, observed-prefix fraction), applies the
+per-task data transforms ``fit`` would apply, and takes one optimizer
+step through the shared SPMD trainer
+(:func:`repro.train.trainer.make_train_step` on a debug mesh) — the same
+harness the curve-transformer baseline pretrains with.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engines import mll_cholesky
+from ..core.state import LKGPConfig, _unflatten_params, log_prior
+from ..core.transforms import TTransform, XTransform, YTransform
+from ..data.curves import sample_suite, stack_suite
+from ..distributed.sharding import TP_RULES
+from ..models.transformer import table_logical
+from ..train.optimizers import OptConfig
+from ..train.trainer import make_train_step
+from .encoder import (Amortizer, AmortizerConfig, forward, init_amortizer,
+                      param_table)
+
+__all__ = ["AmortizeTrainConfig", "AmortizerModel", "build_amortizer_model",
+           "sample_amortize_batch", "train_amortizer"]
+
+
+@dataclass(frozen=True)
+class AmortizeTrainConfig:
+    steps: int = 400
+    tasks_per_step: int = 8
+    n: int = 8                 # configs per task
+    m: int = 9                 # epochs per task
+    seed: int = 0
+    peak_lr: float = 1e-3
+    prefix_lo: float = 0.15    # observed-fraction window (uniform per curve)
+    prefix_hi: float = 0.9
+    log_every: int = 50
+
+
+class AmortizerModel(NamedTuple):
+    """Duck-types the zoo ``Model`` for ``make_train_step``."""
+    cfg: AmortizerConfig
+    param_table: dict
+    logical: dict
+    init: Callable
+    loss: Callable
+    predict: Callable
+
+
+def build_amortizer_model(acfg: AmortizerConfig,
+                          gp_cfg: LKGPConfig | None = None) -> AmortizerModel:
+    """The trainable model; ``gp_cfg`` fixes the MLL's kernel + jitter so
+    training optimises the same objective surface ``fit`` will polish on.
+    """
+    gp = gp_cfg or LKGPConfig()
+    table = param_table(acfg)
+
+    def one_task(params, Xn, tn, Yn, mask):
+        flat = forward(params, Xn, tn, Yn, mask, acfg)
+        p = _unflatten_params(flat, acfg.d)
+        n_obs = jnp.maximum(jnp.sum(mask), 1.0)
+        mll = mll_cholesky(p, Xn, tn, Yn, mask, gp.t_kernel, gp.jitter)
+        return -(mll + log_prior(p, acfg.d)) / n_obs
+
+    def loss(params, batch, constrain=None):
+        per_task = jax.vmap(
+            lambda Xn, tn, Yn, mask: one_task(params, Xn, tn, Yn, mask))(
+                batch["Xn"], batch["tn"], batch["Yn"], batch["mask"])
+        return jnp.mean(per_task)
+
+    return AmortizerModel(
+        cfg=acfg, param_table=table, logical=table_logical(table),
+        init=lambda key, dtype=acfg.dtype: init_amortizer(key, acfg),
+        loss=loss,
+        predict=lambda p, Xn, tn, Yn, mask: forward(p, Xn, tn, Yn, mask,
+                                                    acfg))
+
+
+def sample_amortize_batch(acfg: AmortizerConfig, cfg: AmortizeTrainConfig,
+                          step: int) -> dict:
+    """One batch of TRANSFORMED tasks, all regimes randomized.
+
+    Transforms are fitted per task exactly as ``fit`` does, so the
+    encoder trains on the distribution it will be queried on.
+    """
+    rng = np.random.default_rng(cfg.seed * 1_000_003 + step)
+    tasks = sample_suite(
+        int(rng.integers(0, 2**31 - 1)), cfg.tasks_per_step,
+        n=cfg.n, m=cfg.m, d=acfg.d,
+        observed_fraction=(cfg.prefix_lo, cfg.prefix_hi),
+        noise=float(rng.uniform(0.003, 0.03)),
+        spike_prob=float(rng.uniform(0.0, 0.08)),
+        diverge_prob=float(rng.uniform(0.0, 0.08)),
+        crossing=bool(rng.random() < 0.5))
+    X, t, Y, mask, _ = stack_suite(tasks)
+    B = cfg.tasks_per_step
+    dt = np.float32
+    Xn = np.empty((B, cfg.n, acfg.d), dt)
+    Yn = np.empty((B, cfg.n, cfg.m), dt)
+    tn = np.empty((B, cfg.m), dt)
+    for b in range(B):
+        Xb = jnp.asarray(X[b])
+        tb = jnp.asarray(t, Xb.dtype)
+        Yb = jnp.asarray(Y[b], Xb.dtype)
+        mb = jnp.asarray(mask[b], Xb.dtype)
+        Yb = jnp.where(mb > 0, Yb, jnp.zeros_like(Yb))
+        # Host data pipeline: the per-task syncs ARE the product here (the
+        # batch is staged to numpy before the device step), not a leak of
+        # device values into Python control flow.
+        Xn[b] = np.asarray(XTransform.fit(Xb)(Xb), dt)   # lint: disable=RA103
+        tn[b] = np.asarray(TTransform.fit(tb)(tb), dt)   # lint: disable=RA103
+        Yn[b] = np.asarray(YTransform.fit(Yb, mb)(Yb), dt)  # lint: disable=RA103
+    return {"Xn": Xn, "tn": tn, "Yn": Yn,
+            "mask": mask.astype(dt)}
+
+
+def train_amortizer(acfg: AmortizerConfig | None = None,
+                    cfg: AmortizeTrainConfig | None = None,
+                    gp_cfg: LKGPConfig | None = None,
+                    opt_cfg: OptConfig | None = None, mesh=None,
+                    out: Any = print):
+    """Train an amortizer from scratch; returns ``(Amortizer, info)``."""
+    from ..launch.mesh import make_debug_mesh
+
+    acfg = acfg or AmortizerConfig()
+    cfg = cfg or AmortizeTrainConfig()
+    model = build_amortizer_model(acfg, gp_cfg)
+    if mesh is None:
+        mesh = make_debug_mesh(data=len(jax.devices()), model=1)
+    opt = opt_cfg or OptConfig(peak_lr=cfg.peak_lr,
+                               warmup_steps=max(5, cfg.steps // 20),
+                               decay_steps=cfg.steps)
+    setup = make_train_step(model, mesh, opt_cfg=opt, rules=TP_RULES)
+
+    t0 = time.time()
+    losses = []
+    with mesh:
+        state = jax.jit(setup.init_state,
+                        out_shardings=setup.state_shardings)(
+                            jax.random.key(cfg.seed))
+        for step in range(cfg.steps):
+            batch = {k: jnp.asarray(v)
+                     for k, v in sample_amortize_batch(acfg, cfg,
+                                                       step).items()}
+            state, metrics = setup.step_fn(state, batch)
+            # Keep the device scalar: float() here would block on the
+            # accelerator every step and kill async dispatch (RA103).
+            losses.append(metrics["loss"])
+            if cfg.log_every and (step + 1) % cfg.log_every == 0:
+                out(f"amortize step {step + 1:5d}  obj "
+                    f"{np.mean(losses[-cfg.log_every:]):.4f}")
+        params = jax.device_get(state.params)
+    info = {
+        "steps": cfg.steps,
+        "train_s": round(time.time() - t0, 3),
+        "first_loss": round(float(np.mean(losses[:20])), 5),
+        "final_loss": round(float(np.mean(losses[-20:])), 5),
+    }
+    return Amortizer(acfg, jax.tree_util.tree_map(jnp.asarray, params)), info

@@ -30,7 +30,8 @@ import numpy as np
 __all__ = ["iter_eqns", "find_f64", "find_host_callbacks", "audit_mll",
            "audit_fit_objective", "audit_posterior_final",
            "audit_fused_mvm", "audit_solvers", "audit_guarded_solves",
-           "audit_dist_fused_mvm", "audit_refit_retrace", "run_all_audits"]
+           "audit_dist_fused_mvm", "audit_refit_retrace",
+           "audit_amortizer", "run_all_audits"]
 
 _CALLBACK_PRIMS = ("pure_callback", "io_callback", "debug_callback",
                    "callback")
@@ -350,6 +351,55 @@ def audit_refit_retrace() -> list[str]:
     return failures
 
 
+def audit_amortizer() -> list[str]:
+    """Amortizer forward is f64/callback-free; polish compiles ONCE.
+
+    Two structural claims behind the amortized warm-start path:
+
+    * the amortizer's forward pass (curve encoder -> set encoder -> head)
+      stays f32 and callback-free — it runs inside cold-fit hot paths, so
+      a stray f64 constant in the Fourier features or the bounded-delta
+      head would double its cost silently;
+    * ``fit(init="amortized", polish_steps=k)`` and a same-shape
+      ``fit_batch`` share ONE ``_POLISH_CACHE`` entry traced exactly once
+      — the batched path dispatches the same compiled single-task program
+      per task (the bitwise-parity design), so a second trace means the
+      cache key is unstable and every batch recompiles.
+    """
+    from repro.amortize import Amortizer, AmortizerConfig, init_amortizer
+    from repro.core import state as state_mod
+    from repro.core.state import LKGPConfig, fit, fit_batch
+
+    acfg = AmortizerConfig(d=3, d_model=16, curve_layers=1, set_layers=1,
+                           num_heads=2, d_ff=32, fourier_feats=2)
+    # Trace-only fixture; never mixes with a training stream.
+    am = Amortizer(acfg, init_amortizer(
+        jax.random.PRNGKey(0), acfg))  # lint: disable=RA101
+    X, t, Y, mask = _problem(n=6, m=5, d=3)
+    jaxpr = jax.make_jaxpr(
+        lambda x, tt, y, mk: am.init_flat(x, tt, y, mk))(X, t, Y, mask)
+    failures = _audit_jaxpr("amortizer.forward", jaxpr)
+
+    state_mod._POLISH_CACHE.clear()
+    cfg = LKGPConfig(polish_steps=2)
+    fit(X, t, Y, mask, cfg, init="amortized", amortizer=am)
+    fit_batch(np.stack([X, X]), t, np.stack([Y, Y]), np.stack([mask, mask]),
+              cfg, init="amortized", amortizer=am)
+    if len(state_mod._POLISH_CACHE) != 1:
+        failures.append(
+            f"amortizer polish: expected 1 cached polish program shared by "
+            f"fit and fit_batch, found {len(state_mod._POLISH_CACHE)} — the "
+            "polish cache key is unstable across entry points")
+    for key, pol in state_mod._POLISH_CACHE.items():
+        n_traces = pol._cache_size()
+        if n_traces != 1:
+            failures.append(
+                f"amortizer polish: program for key {key[0]!r} traced "
+                f"{n_traces} times across fit/fit_batch — the batched path "
+                "is not reusing the single-task executable")
+    return failures
+
+
 def run_all_audits(verbose: bool = False) -> list[str]:
     """Run every auditor; returns the list of failure messages."""
     audits = [("mll f64/callback", audit_mll),
@@ -359,7 +409,8 @@ def run_all_audits(verbose: bool = False) -> list[str]:
               ("solver stack f64/callback", audit_solvers),
               ("guarded solves f64/callback", audit_guarded_solves),
               ("distributed fused MVM", audit_dist_fused_mvm),
-              ("refit retrace", audit_refit_retrace)]
+              ("refit retrace", audit_refit_retrace),
+              ("amortizer forward + polish reuse", audit_amortizer)]
     failures: list[str] = []
     for name, fn in audits:
         try:

@@ -59,7 +59,17 @@ class CurvePredictor:
     maximize : if False the metric is negated internally so score space is
         always "larger is better" (ignored when ``metric_tf`` is given).
     refit_lbfgs_iters : L-BFGS budget for warm-started refits
-        (None -> ``gp.lbfgs_iters``).
+        (None -> ``gp.lbfgs_iters``). Only the host-L-BFGS path reads it:
+        with ``gp.polish_steps >= 0`` every fit/refit instead runs the
+        fixed-budget device polish from the init ``gp.hyper_init``
+        selects (``"default"`` or ``"amortized"``; refits warm-start from
+        the current optimum unless ``hyper_init="amortized"``, which
+        re-amortizes on each round's extended data).
+    amortizer : explicit :class:`repro.amortize.Amortizer` forwarded to
+        ``fit``/``refit``; passing one opts every fit and refit into
+        amortized inits with this encoder. None leaves the choice to
+        ``gp.hyper_init`` (whose ``"amortized"`` resolves the
+        registered/packaged encoder lazily).
     t : explicit progression grid (length ``max_epochs``; positive,
         strictly increasing) — e.g. a real dataset's log-spaced budget
         fidelities. The GP's progression kernel sees these values; the
@@ -73,7 +83,7 @@ class CurvePredictor:
     def __init__(self, X, max_epochs: int | None = None,
                  gp: LKGPConfig | None = None,
                  maximize: bool = True, refit_lbfgs_iters: int | None = None,
-                 seed: int = 0, t=None, metric_tf=None):
+                 seed: int = 0, t=None, metric_tf=None, amortizer=None):
         self.X = np.asarray(X, np.float64)
         if t is not None:
             self.t = np.asarray(t, np.float64)
@@ -92,6 +102,7 @@ class CurvePredictor:
         self.metric_tf = (metric_tf if metric_tf is not None
                           else AffineTransform.sign(maximize))
         self.refit_lbfgs_iters = refit_lbfgs_iters
+        self.amortizer = amortizer
         self.seed = seed
         self.state: LKGPState | None = None
         self.n_refits = 0
@@ -110,11 +121,13 @@ class CurvePredictor:
         Y = np.asarray(self.metric_tf(np.asarray(Y, np.float64)), np.float64)
         mask = np.asarray(mask, np.float64)
         if self.state is None:
-            self.state = fit(self.X, self.t, Y, mask, self.gp)
+            self.state = fit(self.X, self.t, Y, mask, self.gp,
+                             amortizer=self.amortizer)
         else:
             self.state = extend(self.state, Y, mask)
             self.state = refit(self.state,
-                               lbfgs_iters=self.refit_lbfgs_iters)
+                               lbfgs_iters=self.refit_lbfgs_iters,
+                               amortizer=self.amortizer)
         self.n_refits += 1
 
     def predict_final(self, key=None):

@@ -39,8 +39,14 @@ class AutotuneConfig:
     ucb_beta: float = 1.0          # stop if pred + beta*std < best estimate
     maximize: bool = True
     gp: LKGPConfig = field(default_factory=lambda: LKGPConfig(lbfgs_iters=30))
-    # L-BFGS budget for warm-started refits; None -> gp.lbfgs_iters.
+    # L-BFGS budget for warm-started refits; None -> gp.lbfgs_iters. Set
+    # gp.polish_steps >= 0 (with gp.hyper_init="amortized"|"default") to
+    # replace the host L-BFGS with the fixed-budget device polish on every
+    # per-round refit instead.
     refit_lbfgs_iters: int | None = None
+    # Explicit repro.amortize.Amortizer; passing one opts every fit/refit
+    # into amortized inits with it (None defers to gp.hyper_init).
+    amortizer: object | None = None
 
 
 class FreezeThawScheduler:
@@ -60,7 +66,8 @@ class FreezeThawScheduler:
         # into the model; scheduling still counts epoch indices.
         self.predictor = CurvePredictor(
             self.X, m, gp=self.cfg.gp, maximize=self.cfg.maximize,
-            refit_lbfgs_iters=self.cfg.refit_lbfgs_iters, seed=seed, t=t)
+            refit_lbfgs_iters=self.cfg.refit_lbfgs_iters, seed=seed, t=t,
+            amortizer=self.cfg.amortizer)
 
     @property
     def state(self) -> LKGPState | None:

@@ -42,7 +42,12 @@ class SHConfig:
     quantile: float = 0.75
     maximize: bool = True
     gp: LKGPConfig = field(default_factory=lambda: LKGPConfig(lbfgs_iters=30))
+    # Host L-BFGS budget for warm refits; ignored when gp.polish_steps >= 0
+    # (fixed-budget device polish, init chosen by gp.hyper_init).
     refit_lbfgs_iters: int | None = 10
+    # Explicit repro.amortize.Amortizer; passing one opts every fit/refit
+    # into amortized inits with it (None defers to gp.hyper_init).
+    amortizer: object | None = None
 
 
 class SuccessiveHalvingScheduler:
@@ -70,7 +75,7 @@ class SuccessiveHalvingScheduler:
                 self.X, self.cfg.max_epochs, gp=self.cfg.gp,
                 maximize=self.cfg.maximize,
                 refit_lbfgs_iters=self.cfg.refit_lbfgs_iters, seed=seed,
-                t=t)
+                t=t, amortizer=self.cfg.amortizer)
         self.predictor = predictor
         self.history: list[dict] = []
 
@@ -177,7 +182,7 @@ class HyperbandScheduler:
                 self.X, self.cfg.max_epochs, gp=self.cfg.gp,
                 maximize=self.cfg.maximize,
                 refit_lbfgs_iters=self.cfg.refit_lbfgs_iters, seed=seed,
-                t=t)
+                t=t, amortizer=self.cfg.amortizer)
         self.brackets: list[dict] = []
 
     def run(self) -> dict:

@@ -20,16 +20,16 @@ package provides that Transformer and the head-to-head harness:
 """
 from .curve_transformer import (CurveModel, CurveTransformerConfig,
                                 build_curve_model, curve_loss, forward,
-                                gaussian_nll, normalize_t, param_table,
-                                predict_task)
+                                gaussian_nll, layer_table, normalize_t,
+                                param_table, predict_task, transformer_stack)
 from .evaluate import (cutoff_masks, eval_lkgp, eval_transformer,
                        head_to_head, score_predictions)
 from .pretrain import PretrainConfig, pretrain, sample_stream_batch
 
 __all__ = [
     "CurveModel", "CurveTransformerConfig", "build_curve_model",
-    "curve_loss", "forward", "gaussian_nll", "normalize_t", "param_table",
-    "predict_task",
+    "curve_loss", "forward", "gaussian_nll", "layer_table", "normalize_t",
+    "param_table", "predict_task", "transformer_stack",
     "PretrainConfig", "pretrain", "sample_stream_batch",
     "cutoff_masks", "eval_lkgp", "eval_transformer", "head_to_head",
     "score_predictions",

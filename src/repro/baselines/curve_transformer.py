@@ -30,8 +30,9 @@ from ..models.layers import attention, mlp, mlp_params, rms_norm
 from ..models.transformer import build_params, table_logical
 
 __all__ = ["CurveTransformerConfig", "CurveModel", "param_table",
-           "build_curve_model", "encode_features", "forward", "gaussian_nll",
-           "curve_loss", "normalize_t", "predict_task"]
+           "layer_table", "transformer_stack", "build_curve_model",
+           "encode_features", "forward", "gaussian_nll", "curve_loss",
+           "normalize_t", "predict_task"]
 
 
 @dataclass(frozen=True)
@@ -72,7 +73,13 @@ class CurveModel(NamedTuple):
 # --------------------------------------------------------------------------
 # parameter table (same (shape, logical_axes, fan_in) format as the zoo)
 # --------------------------------------------------------------------------
-def _layer_table(cfg: CurveTransformerConfig):
+def layer_table(cfg: CurveTransformerConfig):
+    """Parameter table for ONE encoder block (pre-norm attention + MLP).
+
+    Exported so other amortized models (e.g. the hyper-parameter encoder
+    in :mod:`repro.amortize`) can stack the same blocks under their own
+    top-level names.
+    """
     D, H, Dh = cfg.d_model, cfg.num_heads, cfg.head_dim
     t = {
         "ln1": ((D,), ("embed",), None),
@@ -99,7 +106,7 @@ def param_table(cfg: CurveTransformerConfig):
         "head/w": ((D, 2), ("embed", None), D),
         "head/b": ((2,), (None,), None),
     }
-    for k, (shape, logical, fan) in _layer_table(cfg).items():
+    for k, (shape, logical, fan) in layer_table(cfg).items():
         table[f"layers/{k}"] = ((cfg.num_layers, *shape),
                                 ("layers", *logical), fan)
     return table
@@ -132,21 +139,15 @@ def encode_features(y, mask, t_norm, cfg: CurveTransformerConfig):
                             tcol, tf.astype(cfg.dtype)], axis=-1)
 
 
-def forward(params, hp, y, mask, t_norm, cfg: CurveTransformerConfig):
-    """hp: (B, d_in); y, mask: (B, m); t_norm: (m,) -> (mu, sigma), (B, m).
+def transformer_stack(x, layers, cfg: CurveTransformerConfig):
+    """Scan the bidirectional pre-norm encoder blocks over ``x``.
 
-    Values at ``mask == 0`` cells never enter the computation (the feature
-    encoder zeroes them), so predictions depend only on the observed prefix.
+    ``x`` is (B, S, d_model); ``layers`` the stacked (num_layers, ...)
+    block parameters (the ``layers/*`` entries of :func:`param_table`, or
+    any other stack built from :func:`layer_table`).
     """
-    B, m = y.shape
+    B, S, _ = x.shape
     H, Dh = cfg.num_heads, cfg.head_dim
-    x = encode_features(y, mask, t_norm, cfg)
-    x = x @ params["in_proj"]["w"] + params["in_proj"]["b"]
-    h0 = jax.nn.gelu(hp.astype(cfg.dtype) @ params["hp_embed"]["w0"]
-                     + params["hp_embed"]["b0"])
-    h0 = h0 @ params["hp_embed"]["w1"]
-    x = jnp.concatenate([h0[:, None, :], x], axis=1)      # (B, m + 1, D)
-    S = m + 1
 
     def body(h, lp):
         hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
@@ -159,7 +160,23 @@ def forward(params, hp, y, mask, t_norm, cfg: CurveTransformerConfig):
         h = h + mlp(hn, lp["mlp"], cfg.mlp_act)
         return h, None
 
-    x, _ = jax.lax.scan(body, x, params["layers"])
+    x, _ = jax.lax.scan(body, x, layers)
+    return x
+
+
+def forward(params, hp, y, mask, t_norm, cfg: CurveTransformerConfig):
+    """hp: (B, d_in); y, mask: (B, m); t_norm: (m,) -> (mu, sigma), (B, m).
+
+    Values at ``mask == 0`` cells never enter the computation (the feature
+    encoder zeroes them), so predictions depend only on the observed prefix.
+    """
+    x = encode_features(y, mask, t_norm, cfg)
+    x = x @ params["in_proj"]["w"] + params["in_proj"]["b"]
+    h0 = jax.nn.gelu(hp.astype(cfg.dtype) @ params["hp_embed"]["w0"]
+                     + params["hp_embed"]["b0"])
+    h0 = h0 @ params["hp_embed"]["w1"]
+    x = jnp.concatenate([h0[:, None, :], x], axis=1)      # (B, m + 1, D)
+    x = transformer_stack(x, params["layers"], cfg)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     out = x[:, 1:, :] @ params["head"]["w"] + params["head"]["b"]  # (B, m, 2)
     mu = out[..., 0]

@@ -17,12 +17,13 @@ strategy; :mod:`~repro.core.cg` remains as a deprecation shim), stochastic
 Lanczos quadrature (:mod:`~repro.core.slq`), the latent-Kronecker MVM
 (:mod:`~repro.core.mvm`), Matheron sampling, transforms, and priors.
 """
+from .caching import LRUCache
 from .engines import (ENGINES, CustomMVMEngine, DenseEngine,
                       DistributedEngine, InferenceEngine, IterativeEngine,
                       LatentKroneckerOperator, PallasEngine,
-                      StackedSolveResult, get_engine, list_backends,
-                      make_mll, make_mll_iterative, mll_cholesky,
-                      register_engine)
+                      StackedSolveResult, engine_cache_stats, get_engine,
+                      list_backends, make_mll, make_mll_iterative,
+                      mll_cholesky, register_engine)
 from .gp_kernels import KERNELS_1D, matern12, matern32, matern52, rbf_ard
 from .lbfgs import LBFGSResult, lbfgs_minimize
 from .lkgp import LKGP
@@ -44,8 +45,10 @@ from .solvers import (SOLVE_POLICIES, SOLVERS, CGResult, CGTridiag,
                       get_solver, guarded_solve, guarded_solve_stacked,
                       list_solvers, pcg_solve, register_solver,
                       resolve_solver, sgd_solve)
-from .state import (GPData, LKGPConfig, LKGPParams, LKGPState, extend, fit,
-                    fit_batch, gram_matrices, init_params, log_prior, refit,
+from .polish import PolishResult, make_polish
+from .state import (FitResult, GPData, LKGPConfig, LKGPParams, LKGPState,
+                    compiled_cache_stats, extend, fit, fit_batch,
+                    gram_matrices, init_params, log_prior, refit,
                     resolve_backend, stack_states, unstack)
 from .transforms import TTransform, XTransform, YTransform
 
@@ -69,9 +72,12 @@ __all__ = [
     "YTransform", "pivoted_cholesky_grid", "pivoted_cholesky_latent",
     "woodbury_preconditioner",
     # state + functional API
-    "LKGPState", "GPData", "LKGPConfig", "LKGPParams", "fit", "fit_batch",
-    "extend", "refit", "unstack", "stack_states", "resolve_backend",
-    "gram_matrices", "init_params", "log_prior",
+    "LKGPState", "GPData", "LKGPConfig", "LKGPParams", "FitResult", "fit",
+    "fit_batch", "extend", "refit", "unstack", "stack_states",
+    "resolve_backend", "gram_matrices", "init_params", "log_prior",
+    # fixed-budget polish + cache instrumentation
+    "PolishResult", "make_polish", "LRUCache", "compiled_cache_stats",
+    "engine_cache_stats",
     # engines
     "InferenceEngine", "ENGINES", "get_engine", "register_engine",
     "list_backends", "DenseEngine", "IterativeEngine", "PallasEngine",

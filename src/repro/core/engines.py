@@ -33,6 +33,7 @@ from typing import Callable, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from .caching import LRUCache
 from .mvm import kron_dense, lk_mvm
 from .precond import pivoted_cholesky_grid, woodbury_preconditioner
 from .slq import slq_logdet
@@ -42,7 +43,7 @@ from .state import GPData, LKGPConfig, LKGPParams, gram_matrices
 
 __all__ = [
     "InferenceEngine", "ENGINES", "register_engine", "get_engine",
-    "list_backends", "DenseEngine", "IterativeEngine", "PallasEngine",
+    "engine_cache_stats", "list_backends", "DenseEngine", "IterativeEngine", "PallasEngine",
     "DistributedEngine", "CustomMVMEngine", "LatentKroneckerOperator",
     "StackedSolveResult", "make_mll", "mll_cholesky", "make_mll_iterative",
     "solve_tally", "escalation_tally",
@@ -125,7 +126,18 @@ def register_engine(name: str):
     return deco
 
 
-_ENGINE_SINGLETONS: dict = {}
+# Bounded + instrumented like the compiled-objective caches it keys (see
+# core.state): the cap is far above the four registered engines, so in
+# practice nothing is ever evicted — an eviction here would mint a new
+# engine identity and silently retrace every cached objective keyed on the
+# old one, which is exactly the pathology the hit/miss counters make
+# visible.
+_ENGINE_SINGLETONS: LRUCache = LRUCache(16)
+
+
+def engine_cache_stats() -> dict:
+    """Hit/miss/eviction counters of the engine singleton map."""
+    return _ENGINE_SINGLETONS.stats()
 
 
 def get_engine(name: str, **kwargs) -> "InferenceEngine":

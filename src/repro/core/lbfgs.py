@@ -162,4 +162,10 @@ def lbfgs_minimize(value_and_grad: Callable, x0, max_iters: int = 100,
             converged = True
             break
         x, f, g = x_new, f_new, g_new
+    # A run that reaches the gradient tolerance exactly on its final iterate
+    # used to report converged=False (the gtol check only ran at the TOP of
+    # each iteration), making a capped-but-converged run indistinguishable
+    # from a genuinely budget-limited one. Check the final iterate too.
+    if not converged and np.max(np.abs(g)) < gtol:
+        converged = True
     return LBFGSResult(x=x, fun=f, n_iters=it, n_evals=n_evals, converged=converged)

@@ -51,12 +51,20 @@ __all__ = ["ServiceConfig", "Prediction", "PredictionService"]
 
 @dataclass(frozen=True)
 class ServiceConfig:
-    """Service policy knobs (the GP itself is configured via ``gp``)."""
+    """Service policy knobs (the GP itself is configured via ``gp``).
+
+    ``gp.hyper_init`` / ``gp.polish_steps`` select the fit strategy for
+    every session: the default host L-BFGS, or an amortized /
+    default-init start polished by a fixed budget of device L-BFGS steps
+    (one compiled program shared across all tenants — see
+    :mod:`repro.amortize` and :mod:`repro.core.polish`).
+    """
 
     gp: LKGPConfig = field(default_factory=LKGPConfig)
     capacity: int = 64            # LRU cap on resident sessions
     refit_every: int = 4          # warm refit every k-th observe (0 = never)
-    refit_lbfgs_iters: int = 5    # L-BFGS budget of a warm refit
+    refit_lbfgs_iters: int = 5    # L-BFGS budget of a warm refit (host path
+    #                               only; ignored when gp.polish_steps >= 0)
     coalesce: bool = True         # allow cross-tenant fit coalescing
     checkpoint_dir: str | None = None   # None: durability off
     checkpoint_every: int = 8     # snapshot every k-th accepted observe
@@ -172,11 +180,15 @@ class PredictionService:
 
         Each request is the kwargs of :meth:`observe` (with ``tenant`` /
         ``task``). Requests for *new* sessions whose shapes match are
-        jointly fitted in ONE vmapped L-BFGS; everything else falls back to
-        per-request :meth:`observe`. Joint fitting shares the line search
+        jointly fitted in one ``fit_batch``; everything else falls back to
+        per-request :meth:`observe`. With the default host L-BFGS
+        (``gp.polish_steps == -1``) the joint fit shares the line search
         across tasks, so hyper-parameters may differ slightly from an
-        individual fit (the posterior parity guarantees apply to
-        *prediction* coalescing, which is bitwise).
+        individual fit; with ``gp.polish_steps >= 0`` every task runs the
+        same compiled fixed-budget polish a single-task fit runs and the
+        coalesced results are bitwise identical to individual observes
+        (matching the posterior parity guarantee of *prediction*
+        coalescing).
         """
         out: list[dict | None] = [None] * len(requests)
         cold: dict[tuple, list[int]] = {}
@@ -352,10 +364,18 @@ class PredictionService:
 
     # -- introspection -----------------------------------------------------
     def metrics(self) -> dict:
+        from ..core.engines import engine_cache_stats
+        from ..core.state import compiled_cache_stats
+
         return {
             "store": self.store.stats(),
             "predict_latency": self.predict_latency.snapshot(),
             "observe_latency": self.observe_latency.snapshot(),
             "counters": {k: c.value for k, c in self.counters.items()},
             "events": self.events.snapshot(),
+            # process-wide compiled-program LRU caches the fit/refit path
+            # runs on — a hot service should show hits >> misses and zero
+            # evictions; evictions here mean recompiles in the latency path.
+            "compiled_caches": {**compiled_cache_stats(),
+                                "engines": engine_cache_stats()},
         }

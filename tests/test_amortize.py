@@ -1,0 +1,217 @@
+"""Amortized hyper-parameter inits: identity start, persistence, bitwise
+fit == fit_batch polish parity, explicit-init round-trips, FitResult
+budget/provenance reporting, and the LRU-bounded compiled caches."""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.amortize import (Amortizer, AmortizerConfig, AmortizeTrainConfig,
+                            clear_amortizer_registry, get_amortizer,
+                            init_amortizer, register_amortizer,
+                            train_amortizer)
+from repro.core import LKGPConfig, fit, fit_batch, refit, unstack
+from repro.core.caching import LRUCache
+from repro.core.state import (_POLISH_BACKTRACKS, _POLISH_CACHE,
+                              _flatten_params, compiled_cache_stats,
+                              init_params)
+
+
+def _tiny_amortizer(d=3, seed=0) -> Amortizer:
+    acfg = AmortizerConfig(d=d, d_model=16, curve_layers=1, set_layers=1,
+                           num_heads=2, d_ff=32, fourier_feats=2)
+    return Amortizer(acfg, init_amortizer(jax.random.PRNGKey(seed), acfg))
+
+
+def _tasks(seed, B=3, n=6, m=5, d=3):
+    """B same-shape prefix-revealed tasks."""
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(size=(B, n, d))
+    t = np.linspace(0.05, 1.0, m)
+    Y = rng.normal(size=(B, n, m))
+    lens = rng.integers(2, m + 1, size=(B, n))
+    mask = (np.arange(m)[None, None, :] < lens[:, :, None]).astype(float)
+    return X, t, Y * mask, mask
+
+
+# -- amortizer mechanics -----------------------------------------------------
+def test_untrained_amortizer_predicts_default_init():
+    """Zero-initialised head => the forward pass IS the prior-mean init."""
+    am = _tiny_amortizer()
+    X, t, Y, mask = _tasks(0, B=1)
+    flat = am.init_flat(X[0], t, Y[0], mask[0])
+    base = _flatten_params(init_params(3, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(base))
+
+
+def test_save_load_roundtrip_bitwise(tmp_path):
+    am = _tiny_amortizer(seed=3)
+    path = tmp_path / "am.npz"
+    am.save(path)
+    am2 = Amortizer.load(path)
+    assert am2.cfg == am.cfg
+    la, lb = (jax.tree_util.tree_leaves(am.params),
+              jax.tree_util.tree_leaves(am2.params))
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    X, t, Y, mask = _tasks(1, B=1)
+    np.testing.assert_array_equal(
+        np.asarray(am.init_flat(X[0], t, Y[0], mask[0])),
+        np.asarray(am2.init_flat(X[0], t, Y[0], mask[0])))
+
+
+def test_init_batch_matches_init_for_bitwise():
+    """The batched entry dispatches the single-task program per task."""
+    am = _tiny_amortizer(seed=5)
+    X, t, Y, mask = _tasks(2, B=4)
+    tb = np.broadcast_to(t, (4, t.shape[0]))
+    batch = am.init_batch(X, tb, Y, mask)
+    for i in range(4):
+        single = am.init_for(X[i], t, Y[i], mask[i])
+        for a, b in zip(jax.tree_util.tree_leaves(single),
+                        jax.tree_util.tree_leaves(batch)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b)[i])
+
+
+def test_registry_and_fixture():
+    clear_amortizer_registry()
+    am = _tiny_amortizer()
+    register_amortizer(am)
+    assert get_amortizer(3) is am
+    with pytest.raises(ValueError, match="amortizer"):
+        get_amortizer(99)   # no registration, no fixture for d=99
+    clear_amortizer_registry()
+    # the committed d=5 fixture loads lazily
+    assert get_amortizer(5).cfg.d == 5
+
+
+# -- fit/fit_batch/refit integration ----------------------------------------
+def test_fit_matches_fit_batch_polish_bitwise():
+    """Same task + same amortized init + same budget => identical params
+    whether fit individually or through the coalesced batch path."""
+    am = _tiny_amortizer(seed=7)
+    X, t, Y, mask = _tasks(3, B=3)
+    cfg = LKGPConfig()
+    stb = fit_batch(X, t, Y, mask, cfg, init="amortized", polish_steps=2,
+                    amortizer=am)
+    singles = [fit(X[i], t, Y[i], mask[i], cfg, init="amortized",
+                   polish_steps=2, amortizer=am) for i in range(3)]
+    for i, (sb, ss) in enumerate(zip(unstack(stb), singles)):
+        for a, b in zip(jax.tree_util.tree_leaves(ss.params),
+                        jax.tree_util.tree_leaves(sb.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"task {i}")
+    # diagnostics: budget, provenance, and the fixed eval count
+    res = stb.fit_result
+    assert res.optimizer == "polish" and res.init_source == "amortized"
+    assert res.budget == 2 and res.n_iters == 2
+    assert res.n_evals == 3 * (1 + 2 * _POLISH_BACKTRACKS)
+
+
+def test_polish_program_shared_between_fit_and_fit_batch():
+    am = _tiny_amortizer(seed=9)
+    X, t, Y, mask = _tasks(4, B=2)
+    cfg = LKGPConfig(jitter=1.1e-6)   # unique cache key for this test
+    _POLISH_CACHE.clear()
+    fit(X[0], t, Y[0], mask[0], cfg, init="amortized", polish_steps=2,
+        amortizer=am)
+    fit_batch(X, t, Y, mask, cfg, init="amortized", polish_steps=2,
+              amortizer=am)
+    assert len(_POLISH_CACHE) == 1
+    stats = compiled_cache_stats()["polish"]
+    assert stats["misses"] >= 1 and stats["hits"] >= 2
+
+
+def test_oneshot_fit_is_the_amortized_init_bitwise():
+    am = _tiny_amortizer(seed=11)
+    X, t, Y, mask = _tasks(5, B=1)
+    st = fit(X[0], t, Y[0], mask[0], LKGPConfig(), init="amortized",
+             polish_steps=0, amortizer=am)
+    assert st.fit_result.optimizer == "none"
+    assert st.fit_result.init_source == "amortized"
+    # polish improves on the one-shot init (same objective surface)
+    stp = fit(X[0], t, Y[0], mask[0], LKGPConfig(), init="amortized",
+              polish_steps=3, amortizer=am)
+    assert stp.fit_result.fun <= st.fit_result.fun + 1e-12
+
+
+def test_explicit_params_roundtrip_refit_untouched():
+    """init=<params> + polish_steps=0 => params pass through refit bitwise."""
+    X, t, Y, mask = _tasks(6, B=1)
+    st = fit(X[0], t, Y[0], mask[0], LKGPConfig(lbfgs_iters=3))
+    p = st.params
+    st2 = refit(st, init=p, polish_steps=0)
+    assert st2.fit_result.init_source == "params"
+    assert st2.fit_result.optimizer == "none"
+    for a, b in zip(jax.tree_util.tree_leaves(p),
+                    jax.tree_util.tree_leaves(st2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # default warm start resolves to state.params and round-trips too
+    st3 = refit(st, polish_steps=0)
+    assert st3.fit_result.init_source == "params"
+    for a, b in zip(jax.tree_util.tree_leaves(p),
+                    jax.tree_util.tree_leaves(st3.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_hyper_init_config_drives_registry():
+    """cfg.hyper_init='amortized' pulls the registered encoder; refit
+    re-amortizes instead of warm-starting from state.params."""
+    clear_amortizer_registry()
+    register_amortizer(_tiny_amortizer(seed=13))
+    try:
+        X, t, Y, mask = _tasks(7, B=1)
+        cfg = LKGPConfig(hyper_init="amortized", polish_steps=2)
+        st = fit(X[0], t, Y[0], mask[0], cfg)
+        assert st.fit_result.init_source == "amortized"
+        st2 = refit(st)
+        assert st2.fit_result.init_source == "amortized"
+    finally:
+        clear_amortizer_registry()
+
+
+def test_fit_result_reports_lbfgs_budget():
+    X, t, Y, mask = _tasks(8, B=1)
+    st = fit(X[0], t, Y[0], mask[0], LKGPConfig(lbfgs_iters=5))
+    res = st.fit_result
+    assert res.optimizer == "lbfgs" and res.init_source == "default"
+    assert res.budget == 5 and 1 <= res.n_iters <= 5
+    assert isinstance(res.converged, (bool, np.bool_))
+
+
+# -- LRU-bounded compiled caches --------------------------------------------
+def test_lru_cache_counters_and_eviction():
+    c = LRUCache(2)
+    c["a"], c["b"] = 1, 2
+    assert c.get("a") == 1          # hit; "a" becomes most-recent
+    assert c.get("zz") is None      # miss
+    c["c"] = 3                      # evicts "b" (least recent)
+    assert "b" not in c and "a" in c and "c" in c
+    s = c.stats()
+    assert s["hits"] == 1 and s["misses"] == 1 and s["evictions"] == 1
+    assert s["size"] == 2 and s["maxsize"] == 2
+
+
+def test_compiled_cache_stats_shape():
+    stats = compiled_cache_stats()
+    for key in ("fit_vg", "polish"):
+        for field in ("hits", "misses", "evictions", "size", "maxsize"):
+            assert isinstance(stats[key][field], int)
+
+
+# -- training smoke ----------------------------------------------------------
+def test_train_amortizer_smoke():
+    """Two tiny self-supervised steps run and keep the loss finite."""
+    acfg = AmortizerConfig(d=4, d_model=16, curve_layers=1, set_layers=1,
+                           num_heads=2, d_ff=32, fourier_feats=2)
+    tcfg = AmortizeTrainConfig(steps=2, tasks_per_step=2, n=4, m=5,
+                               log_every=1)
+    am, info = train_amortizer(acfg, tcfg, out=lambda *_: None)
+    assert isinstance(am, Amortizer)
+    assert np.isfinite(info["first_loss"]) and np.isfinite(info["final_loss"])
+    X, t, Y, mask = _tasks(9, B=1, n=4, m=5, d=4)
+    flat = am.init_flat(X[0], t, Y[0], mask[0])
+    assert np.isfinite(np.asarray(flat)).all()

@@ -257,11 +257,16 @@ def test_metrics_shape():
     svc.predict("t0", "run")
     m = svc.metrics()
     assert set(m) == {"store", "predict_latency", "observe_latency",
-                      "counters", "events"}
+                      "counters", "events", "compiled_caches"}
     assert m["counters"]["predicts"] == 1
     assert m["counters"]["observes"] == 2
     assert m["predict_latency"]["count"] == 1
     assert m["store"]["size"] == 2
+    # compiled-program cache health (LRU counters) is service-observable
+    for cache in ("fit_vg", "polish", "engines"):
+        stats = m["compiled_caches"][cache]
+        assert {"size", "maxsize", "hits", "misses",
+                "evictions"} <= set(stats)
 
 
 def test_solve_tally_is_thread_safe():
